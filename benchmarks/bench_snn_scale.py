@@ -1,0 +1,57 @@
+"""Scaling the universal interconnect (paper Table I analogue + DESIGN §4).
+
+Paper Table I reports per-neuron LUT/register cost growing with fan-in.
+Our TPU analogue: per-tick FLOPs/bytes of the sharded masked synaptic
+matmul as N grows, plus the beyond-paper event-driven dispatch win at
+realistic spike rates (the mux fabric "routing zeros" vs skipping them).
+Wall-times here are CPU-interpret numbers (structure, not speed); the
+FLOP/byte model is the hardware-relevant output.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ref import spike_matmul_ref
+
+
+def run() -> Dict:
+    rng = np.random.default_rng(0)
+    out: Dict = {"bench": "snn scaling (paper Table I analogue)"}
+    for n in (74, 256, 1024):
+        b = 32
+        rate = 0.05
+        s = (rng.random((b, n)) < rate).astype(np.float32)
+        w = rng.normal(size=(n, n)).astype(np.float32)
+        c = (rng.random((n, n)) < 0.5).astype(np.float32)
+
+        dense_flops = 2 * b * n * n
+        k_active = max(8, int(2 * rate * n))
+        event_flops = 2 * b * k_active * n
+        got = ops.event_spike_matmul(jnp.asarray(s), jnp.asarray(w),
+                                     jnp.asarray(c), k_active=k_active)
+        want = spike_matmul_ref(jnp.asarray(s), jnp.asarray(w), jnp.asarray(c))
+        exact = bool(np.allclose(got, want, rtol=1e-4, atol=1e-4))
+
+        out[f"n{n}_dense_flops_per_tick"] = dense_flops
+        out[f"n{n}_event_flops_per_tick"] = event_flops
+        out[f"n{n}_event_speedup_model"] = dense_flops / event_flops
+        out[f"n{n}_event_exact"] = exact
+        out[f"n{n}_synapse_bytes_u8"] = n * n
+        out[f"n{n}_spike_bytes_per_tick"] = b * n  # what the mux fabric moves
+    # 64k-neuron production core, per-tick cost model on the (16,16) mesh
+    n, b = 65536, 256
+    out["n65536_synapse_GB_u8"] = n * n / 2**30
+    out["n65536_dense_TFLOPs_per_tick"] = 2 * b * n * n / 1e12
+    out["n65536_per_chip_MB_u8_256chips"] = n * n / 256 / 2**20
+    return out
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k}: {v}")

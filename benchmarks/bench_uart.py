@@ -1,0 +1,38 @@
+"""The paper's UART transaction table (§III.B), reproduced exactly, plus
+the scaling the paper's future-work section motivates."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import uart
+from repro.core.registers import TimingModel, transaction_breakdown
+
+
+def run() -> Dict:
+    bd74 = transaction_breakdown(74)
+    bd1 = transaction_breakdown(1)
+    out = {
+        "bench": "uart reprogram cost (paper §III.B)",
+        "74n_cl_txns": bd74.connection_list,          # paper: 740
+        "74n_threshold_txns": bd74.thresholds,        # paper: 74
+        "74n_weight_txns": bd74.weights,              # paper: 74
+        "74n_impulse_txns": bd74.impulses,            # paper: 10
+        "74n_total_txns": bd74.total,                 # paper: 898
+        "74n_time_ms_paper": bd74.time_s(TimingModel.PAPER) * 1e3,   # 93.54
+        "1n_total_txns": bd1.total,                   # paper: 4
+        "1n_time_us_paper": bd1.time_s(TimingModel.PAPER) * 1e6,     # 416.68
+        "74n_time_ms_wire8n1": bd74.time_s(TimingModel.WIRE_8N1) * 1e3,
+    }
+    # Scaling: the CL register dominates O(N^2/8); show the paper's
+    # bottleneck growing, and the modern-link replacement cost.
+    for n in (74, 256, 1024, 65536):
+        bd = transaction_breakdown(n)
+        out[f"{n}n_total_bytes"] = bd.total
+        out[f"{n}n_uart_s"] = bd.time_s(TimingModel.WIRE_8N1)
+        out[f"{n}n_pcie16GBps_s"] = uart.scaled_reprogram_time(bd.total)
+    return out
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k}: {v}")

@@ -1,0 +1,144 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, derives the three terms:
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+Sources: ``hlo_cost`` fields of the dry-run JSON (the trip-count-corrected
+parse of ``compiled.as_text()``; XLA's raw ``cost_analysis()`` counts while
+bodies once -- both are recorded). Since SPMD modules are per-device
+programs, per-device FLOPs/bytes are already "/ chips"; terms divide by
+per-chip peaks directly.
+
+Hardware model (TPU v5e target):
+  peak 197 TFLOP/s bf16 / chip; 819 GB/s HBM / chip; ~50 GB/s/link ICI.
+
+MODEL_FLOPS = 6*N*D (train, dense) or 6*N_active*D (MoE); decode/prefill
+use 2*N_active per token. The MODEL/HLO ratio flags remat & dispatch waste.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s/link (per-chip effective)
+
+DRYRUN_DIR = "artifacts/dryrun"
+
+
+def model_flops(rec: Dict) -> float:
+    """Paper-standard useful FLOPs for the cell (whole program, all chips)."""
+    n_active = rec["n_active_params"]
+    tokens = rec["global_batch"] * rec["seq_len"]
+    if rec["kind"] == "train":
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * rec["global_batch"]
+
+
+def roofline_terms(rec: Dict) -> Dict:
+    chips = rec["n_chips"]
+    hc = rec["hlo_cost"]
+    flops_dev = hc["flops_per_device"]
+    bytes_dev = hc["dot_bytes_per_device"]
+    coll_dev = hc["total_collective_bytes_per_device"]
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_collective = coll_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(rec)
+    hlo_global = flops_dev * chips
+    useful_ratio = mf / hlo_global if hlo_global else float("nan")
+    # roofline fraction: useful model FLOPs vs what the dominant term's
+    # wall-time could have delivered at peak.
+    bound_s = max(terms.values())
+    frac = (mf / chips / PEAK_FLOPS) / bound_s if bound_s > 0 else float("nan")
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": useful_ratio,
+        "roofline_fraction": frac,
+        "collective_bytes_by_kind": hc["collective_bytes_per_device"],
+    }
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR, mesh: Optional[str] = None) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        if mesh and rec["mesh"] != mesh:
+            continue
+        recs.append(rec)
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:7.2f}ms"
+    return f"{x*1e6:7.2f}us"
+
+
+def table(recs: List[Dict], *, only_singlepod: bool = True) -> str:
+    lines = []
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':8s} {'compute':9s} {'memory':9s} "
+           f"{'collect':9s} {'bound':8s} {'MFLOPs/HLO':10s} {'roofline%':9s} {'mem/chip':9s}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for rec in recs:
+        if only_singlepod and rec["mesh"] != "16x16":
+            continue
+        t = roofline_terms(rec)
+        mem_gb = (rec["memory_analysis"].get("temp_size_in_bytes", 0)
+                  + rec["memory_analysis"].get("argument_size_in_bytes", 0)) / 2**30
+        lines.append(
+            f"{rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:8s} "
+            f"{fmt_s(t['compute_s'])} {fmt_s(t['memory_s'])} {fmt_s(t['collective_s'])} "
+            f"{t['dominant']:8s} {t['useful_ratio']:10.3f} "
+            f"{100*t['roofline_fraction']:8.1f}% {mem_gb:7.1f}GB")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default=DRYRUN_DIR)
+    ap.add_argument("--all-meshes", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    recs = load_records(args.dryrun_dir)
+    print(table(recs, only_singlepod=not args.all_meshes))
+    if args.json_out:
+        out = []
+        for rec in recs:
+            out.append({
+                "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                "tag": rec.get("tag", ""),
+                **roofline_terms(rec),
+                "memory_analysis": rec["memory_analysis"],
+            })
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

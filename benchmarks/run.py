@@ -1,0 +1,55 @@
+"""Benchmark runner: one bench per paper table/figure + the roofline readout.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the training-heavy benches")
+    args = ap.parse_args()
+
+    from benchmarks import bench_iris, bench_latency, bench_mnist, bench_snn_scale, bench_uart
+
+    benches = [
+        ("uart", bench_uart.run),
+        ("latency", bench_latency.run),
+        ("snn_scale", bench_snn_scale.run),
+    ]
+    if not args.fast:
+        benches += [("iris", bench_iris.run), ("mnist", bench_mnist.run)]
+
+    results = {}
+    for name, fn in benches:
+        t0 = time.time()
+        print(f"=== bench:{name} ===", flush=True)
+        res = fn()
+        res["_wall_s"] = round(time.time() - t0, 2)
+        results[name] = res
+        for k, v in res.items():
+            print(f"  {k}: {v}")
+
+    # roofline summary if dry-run artifacts exist
+    try:
+        from benchmarks import roofline
+        recs = roofline.load_records()
+        if recs:
+            print("=== bench:roofline (from dry-run artifacts) ===")
+            print(roofline.table(recs))
+        else:
+            print("=== roofline: no dry-run artifacts (run repro.launch.dryrun) ===")
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline summary unavailable: {e}")
+
+    print("=== benchmark summary (json) ===")
+    print(json.dumps(results, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.checkpoint.checkpointer import (
+    AsyncCheckpointer, all_steps, latest_step, restore, save,
+)
+
+__all__ = ["AsyncCheckpointer", "all_steps", "latest_step", "restore", "save"]

@@ -1,0 +1,56 @@
+"""Architecture registry: every --arch id maps to an ArchBundle."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (
+    ArchBundle, ModelConfig, ParallelConfig, ShapeConfig, SHAPES, applicable_shapes,
+)
+
+_REGISTRY = {}
+
+
+def register(name):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_bundle(name: str) -> ArchBundle:
+    if name not in _REGISTRY:
+        # import side-effect registration
+        from repro.configs import (  # noqa: F401
+            llama4_scout_17b_a16e, moonshot_v1_16b_a3b, qwen3_0_6b,
+            starcoder2_15b, smollm_135m, smollm_360m, jamba_1_5_large_398b,
+            llama_3_2_vision_90b, rwkv6_1_6b, musicgen_large,
+            iris_snn, mnist_snn, snn_64k,
+        )
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> List[str]:
+    get_bundle.__wrapped__ = None  # force imports
+    try:
+        get_bundle("__none__")
+    except KeyError:
+        pass
+    return sorted(_REGISTRY)
+
+
+ASSIGNED_ARCHS = [
+    "llama4-scout-17b-a16e",
+    "moonshot-v1-16b-a3b",
+    "qwen3-0.6b",
+    "starcoder2-15b",
+    "smollm-135m",
+    "smollm-360m",
+    "jamba-1.5-large-398b",
+    "llama-3.2-vision-90b",
+    "rwkv6-1.6b",
+    "musicgen-large",
+]
+
+SNN_ARCHS = ["iris-snn", "mnist-snn", "snn-64k"]

@@ -1,0 +1,36 @@
+"""Production-scale SNN core: 65,536 neurons, all-to-all fabric.
+
+The paper's architecture scaled to the point where the synapse matrix
+(64k x 64k = 4.3G synapses) must shard across the mesh -- the
+"universal interconnect" as a distributed system (DESIGN.md §4). Used by
+the SNN scaling benchmark and the optional SNN dry-run cell.
+"""
+from repro.configs import register
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+FULL = ModelConfig(
+    name="snn-64k",
+    family="snn",
+    n_neurons=65536,
+    layer_sizes=(),        # free-form all-to-all, not layered
+    n_ticks=8,
+    snn_mode="fixed_leak",
+    dtype="float32",
+    source="DESIGN.md §4 scale-up of paper §II.D",
+)
+
+SMOKE = ModelConfig(
+    name="snn-64k-smoke",
+    family="snn",
+    n_neurons=256,
+    layer_sizes=(),
+    n_ticks=8,
+    snn_mode="fixed_leak",
+    head_pad=1,
+    dtype="float32",
+)
+
+
+@register("snn-64k")
+def bundle() -> ArchBundle:
+    return ArchBundle(model=FULL, smoke=SMOKE, parallel={"*": ParallelConfig()})

@@ -1,0 +1,239 @@
+"""The paper's classification workflow, end to end (§III + §IV).
+
+Host side: encode features to spikes, train the 2-layer SNN offline
+(surrogate-gradient; the paper's authors likewise prepared weights on the
+host), quantize to the u8 hardware grid, and download through the register
+bank byte protocol. Device side: bit-faithful integer LIF inference
+(``lif_step_int``) -- exactly what the FPGA executes.
+
+Weights are constrained non-negative (softplus) to match the hardware's
+0-255 weight registers; argmax readout over output-neuron accumulated
+potential is invariant to the common offset, so non-negativity costs no
+expressiveness for classification.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import quant
+from repro.core.lif import LIFParams, LIFState, lif_step
+from repro.core.registers import RegisterBank, WeightLayout
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainedSNN:
+    w: np.ndarray            # float non-negative (n_in, n_out)
+    bias: np.ndarray         # float non-negative (n_out,) tonic I_bias (Eq. 1)
+    v_th: float
+    n_ticks: int
+    leak: float
+    r_ref: int
+
+
+def _forward_float(w, bias, x_drive, *, v_th: float, n_ticks: int, leak: float,
+                   surrogate: bool):
+    """Clamp input drive for n_ticks; return output logits.
+
+    x_drive: (B, n_in) spike/level drive. Output neurons integrate
+    ``x_drive @ w + I_bias`` each tick (paper Eq. 1); logits = spike count
+    + a membrane term (differentiable through the surrogate). The bias is
+    the per-neuron tonic input register -- with non-negative weights it
+    supplies the per-class offset a pure excitatory fabric lacks."""
+    b, n_in = x_drive.shape
+    n_out = w.shape[1]
+    p = LIFParams.make(n_out, v_th=v_th, leak=leak, r_ref=0)
+    syn = x_drive @ w + bias[None, :]
+
+    def tick(state, _):
+        s2 = lif_step(state, syn, p, mode="fixed_leak", surrogate=surrogate,
+                      reset="subtract")
+        return s2, s2.y
+
+    s0 = LIFState.zeros((b,), n_out)
+    s_fin, ys = jax.lax.scan(tick, s0, None, length=n_ticks)
+    # Rate-coding identity (reset-by-subtraction):
+    #   count * v_th + v_final == n_ticks * drive   (exactly)
+    # so this readout is an exact monotone image of the drive.
+    return ys.sum(0) + s_fin.v / v_th
+
+
+def train(
+    x: np.ndarray,
+    y: np.ndarray,
+    cfg: ModelConfig,
+    *,
+    epochs: int = 1500,
+    lr: float = 0.1,
+    v_th: float | None = None,
+    leak: float = 0.0,
+    seed: int = 0,
+) -> TrainedSNN:
+    """Full-batch training of the paper's 2-layer net.
+
+    Optimizes the per-class *drive* ``x @ w + I_bias`` directly. This is
+    exact, not a shortcut: with a threshold shared across output neurons,
+    the hardware readout (spike count, membrane remainder) is the same
+    strictly-monotone function of each neuron's constant drive, so
+    ``argmax(readout_c) == argmax(drive_c)`` -- training the drive trains
+    the spiking classifier (validated float-vs-int in tests). Weights and
+    biases are softplus-constrained non-negative (u8 registers); the bias
+    is the tonic ``I_bias`` of Eq. 1, which restores the per-class offset
+    an excitatory-only fabric otherwise lacks.
+
+    After training, ``v_th`` is set just below the winning class's typical
+    drive so that (as the paper describes) "only one of the output neurons
+    spikes to indicate the classification result".
+    """
+    n_in, n_out = cfg.layer_sizes
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    raw = {"w": jax.random.normal(k1, (n_in, n_out), jnp.float32) * 0.3,
+           "b": jax.random.normal(k2, (n_out,), jnp.float32) * 0.1}
+    xd = jnp.asarray(x, jnp.float32)
+    yd = jnp.asarray(y, jnp.int32)
+
+    def drives(params, xx):
+        w = jax.nn.softplus(params["w"]) * 2.0
+        bias = jax.nn.softplus(params["b"]) * 2.0
+        return xx @ w + bias[None, :]
+
+    def loss_fn(params):
+        lp = jax.nn.log_softmax(drives(params, xd), axis=-1)
+        return -jnp.take_along_axis(lp, yd[:, None], axis=-1).mean()
+
+    opt = adamw.init(raw)
+    step = jax.jit(lambda p, o: _train_step(p, o, loss_fn, lr))
+    for _ in range(epochs):
+        raw, opt = step(raw, opt)
+    w = np.asarray(jax.nn.softplus(raw["w"]) * 2.0)
+    bias = np.asarray(jax.nn.softplus(raw["b"]) * 2.0)
+
+    if v_th is None:
+        # Threshold ABOVE the per-tick drive band: every output neuron then
+        # operates in the strictly-monotone accumulate-several-ticks-per-
+        # spike regime (score = count + membrane remainder is injective in
+        # the drive), so no two classes can saturate into a tie. The winner
+        # still spikes within the readout window (n_ticks * drive >> v_th).
+        d = np.asarray(drives(raw, xd))
+        # Any shared v_th is exact under reset-by-subtraction; choose it in
+        # the winner-spikes band (paper: "only one output neuron spikes").
+        v_th = float(np.median(d.max(axis=1)) * 0.9) + 1e-3
+    return TrainedSNN(w=w, bias=bias, v_th=v_th, n_ticks=cfg.n_ticks,
+                      leak=leak, r_ref=0)
+
+
+def _train_step(params, opt, loss_fn, lr):
+    grads = jax.grad(loss_fn)(params)
+    return adamw.update(grads, opt, params, lr=lr, weight_decay=0.0)
+
+
+def predict_float(model: TrainedSNN, x: np.ndarray) -> np.ndarray:
+    logits = _forward_float(
+        jnp.asarray(model.w), jnp.asarray(model.bias), jnp.asarray(x, jnp.float32),
+        v_th=model.v_th, n_ticks=model.n_ticks, leak=model.leak, surrogate=False)
+    return np.asarray(jnp.argmax(logits, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# hardware download path
+
+
+@dataclasses.dataclass
+class DeployedSNN:
+    """What lives on the device after the UART download."""
+    bank: RegisterBank
+    w_int: np.ndarray       # i32 (n_in, n_out) reconstructed from registers
+    th_int: np.ndarray      # i32 (n_out,)
+    b_int: np.ndarray       # i32 (n_out,) tonic I_bias register
+    scale: float
+    n_ticks: int
+
+
+def deploy(model: TrainedSNN, *, n_neurons: Optional[int] = None) -> DeployedSNN:
+    """Quantize -> pack into a RegisterBank -> serialize over the UART byte
+    protocol -> reload on the 'device' -> reconstruct integer network.
+
+    Uses the general per-synapse layout (paper §II.A: per-synapse u8
+    weights); the flat neuron array is [inputs..., outputs...] as in
+    Fig. 4/6, with the connection list wiring the bipartite layers.
+    """
+    from repro.core import connectivity
+
+    n_in, n_out = model.w.shape
+    n = n_neurons or (n_in + n_out)
+    # shared quantization grid across weights, biases, and thresholds; the
+    # grid must cover v_th (8-bit threshold registers) or th_int clips
+    w_max = float(max(model.w.max(), model.bias.max(), model.v_th, 1e-8))
+    qw = quant.quantize_u8(jnp.asarray(model.w), w_max)
+    qb = quant.quantize_u8(jnp.asarray(model.bias), w_max)
+    th_q = quant.quantize_threshold(
+        jnp.full((n_out,), model.v_th), qw.scale)
+
+    bank = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+    w_full = np.zeros((n, n), np.uint8)
+    w_full[:n_in, n_in : n_in + n_out] = np.asarray(qw.q)
+    bank.set_weights(w_full)
+    bank.set_connection_list(connectivity.layered([n_in, n_out]))
+    th_full = np.zeros((n,), np.uint8)
+    th_full[n_in : n_in + n_out] = np.asarray(th_q)
+    bank.set_thresholds(th_full)
+    b_full = np.zeros((n,), np.uint8)
+    b_full[n_in : n_in + n_out] = np.asarray(qb.q)
+    bank.set_bias(b_full)
+
+    # wire transfer: serialize -> (UART) -> reload
+    from repro.core import uart
+    payload = bank.serialize()
+    link = uart.HostLink()
+    received = link.send(payload)
+    bank_dev = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+    bank_dev.load_bytes(received)
+    bank_dev.set_bias(bank.bias)  # device-local registers (not in the stream)
+
+    c = bank_dev.get_connection_list().astype(np.int32)
+    w_dev = bank_dev.weights.astype(np.int32) * c
+    w_int = w_dev[:n_in, n_in : n_in + n_out]
+    th_int = bank_dev.thresholds[n_in : n_in + n_out].astype(np.int32)
+    b_int = bank_dev.bias[n_in : n_in + n_out].astype(np.int32)
+    return DeployedSNN(bank=bank_dev, w_int=w_int, th_int=th_int, b_int=b_int,
+                       scale=float(qw.scale), n_ticks=model.n_ticks)
+
+
+def predict_int(dep: DeployedSNN, x_spikes: np.ndarray,
+                drive_levels: int = 1) -> np.ndarray:
+    """Bit-faithful integer inference (the FPGA datapath).
+
+    x_spikes: (B, n_in) integer drive (binary spikes or quantized levels).
+    Returns argmax over accumulated integer membrane + spike counts.
+    """
+    xd = jnp.asarray(x_spikes, jnp.int32)
+    b = xd.shape[0]
+    n_out = dep.w_int.shape[1]
+    syn = xd @ jnp.asarray(dep.w_int)
+
+    p = LIFParams(
+        v_th=jnp.asarray(dep.th_int), leak=jnp.zeros(n_out, jnp.int32),
+        r_ref=jnp.zeros(n_out, jnp.int32), gain=jnp.ones(n_out, jnp.int32),
+        i_bias=jnp.asarray(dep.b_int), v_reset=jnp.zeros(n_out, jnp.int32))
+
+    state = LIFState(v=jnp.zeros((b, n_out), jnp.int32),
+                     r=jnp.zeros((b, n_out), jnp.int32),
+                     y=jnp.zeros((b, n_out), jnp.int32))
+    counts = jnp.zeros((b, n_out), jnp.int32)
+    for _ in range(dep.n_ticks):
+        state = lif_step(state, syn, p, mode="int", reset="subtract")
+        counts = counts + state.y
+    # exact rate-coding readout: count*v_th + v_final == n_ticks*drive
+    score = counts * jnp.asarray(dep.th_int) + state.v
+    return np.asarray(jnp.argmax(score, axis=-1))
+
+
+def accuracy(pred: np.ndarray, y: np.ndarray) -> float:
+    return float((pred == y).mean())

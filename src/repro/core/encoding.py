@@ -1,0 +1,82 @@
+"""Spike encoders / decoders (the paper's host-side preprocessing, §IV).
+
+* MNIST 8x8: grayscale -> binarize by threshold -> one spike per active
+  pixel (paper §III.B).
+* Iris: features normalized and quantized to small spike counts
+  (the waveform in Fig. 5 shows quantized feature values 01/01/04/02 used
+  as impulse magnitudes); we provide both *rate* coding (feature value ->
+  number of spikes over T ticks) and *level* coding (feature value ->
+  integer impulse magnitude on one tick).
+* Decoders: spike-count argmax ("the neuron with the highest accumulated
+  activation", §III.B) and first-spike.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binarize(x: jax.Array, threshold: float = 0.5) -> jax.Array:
+    """Pixels above threshold spike ('1'), the rest stay silent ('0')."""
+    return (x > threshold).astype(jnp.float32)
+
+
+def level_encode(x: jax.Array, levels: int = 4, x_max: float = 1.0) -> jax.Array:
+    """Quantize a feature in [0, x_max] to an integer impulse magnitude.
+
+    Reproduces the Fig. 5 impulse registers (values like 01/02/04): the
+    feature is scaled to ``[0, levels]`` and rounded. The result drives the
+    synaptic input directly on a single tick.
+    """
+    q = jnp.round(jnp.clip(x / x_max, 0.0, 1.0) * levels)
+    return q.astype(jnp.float32)
+
+
+def rate_encode(
+    x: jax.Array, n_ticks: int, x_max: float = 1.0
+) -> jax.Array:
+    """Deterministic rate code: feature value -> spike count over n_ticks.
+
+    Returns shape ``(n_ticks, *x.shape)`` of {0,1} spikes, evenly spaced
+    (deterministic; reproducible without RNG, like the hardware testbench).
+    """
+    frac = jnp.clip(x / x_max, 0.0, 1.0)
+    # Spike at tick t iff floor(frac*(t+1)) > floor(frac*t)  (Bresenham).
+    t = jnp.arange(1, n_ticks + 1, dtype=jnp.float32)
+    shaped = frac[None, ...] * t.reshape((n_ticks,) + (1,) * x.ndim)
+    prev = frac[None, ...] * (t - 1.0).reshape((n_ticks,) + (1,) * x.ndim)
+    return (jnp.floor(shaped + 1e-6) > jnp.floor(prev + 1e-6)).astype(jnp.float32)
+
+
+def latency_encode(x: jax.Array, n_ticks: int, x_max: float = 1.0) -> jax.Array:
+    """Stronger inputs spike earlier; zero input never spikes."""
+    frac = jnp.clip(x / x_max, 0.0, 1.0)
+    fire_at = jnp.where(frac > 0, jnp.round((1.0 - frac) * (n_ticks - 1)), n_ticks)
+    t = jnp.arange(n_ticks).reshape((n_ticks,) + (1,) * x.ndim)
+    return (t == fire_at[None, ...]).astype(jnp.float32)
+
+
+def decode_spike_count(spikes: jax.Array, axis: int = 0) -> jax.Array:
+    """Class = output neuron with the highest accumulated activation."""
+    return jnp.argmax(spikes.sum(axis=axis), axis=-1)
+
+
+def decode_first_spike(spikes: jax.Array) -> jax.Array:
+    """Class = first output neuron to spike (ties -> lower index).
+
+    ``spikes`` has shape ``(T, ..., n_out)``.
+    """
+    t_axis = 0
+    n_ticks = spikes.shape[t_axis]
+    ticks = jnp.arange(n_ticks, dtype=jnp.float32).reshape(
+        (n_ticks,) + (1,) * (spikes.ndim - 1)
+    )
+    first = jnp.where(spikes > 0, ticks, jnp.float32(n_ticks))
+    first = first.min(axis=t_axis)
+    return jnp.argmin(first, axis=-1)
+
+
+def decode_potential(v: jax.Array) -> jax.Array:
+    """Class = output neuron with the highest final membrane potential
+    (tie-break decoder when no output neuron reaches threshold)."""
+    return jnp.argmax(v, axis=-1)

@@ -1,0 +1,234 @@
+"""Discrete-time leaky integrate-and-fire (LIF) neuron dynamics.
+
+Implements the paper's two formulations exactly:
+
+* **Euler model** (paper Eq. 1-4): membrane decays by a factor
+  ``(1 - dt/tau_m)`` each tick and integrates ``dt/C_m * (w.s + I_bias)``.
+
+* **Fixed-leak hardware realization** (paper Eq. 5): the leak is a constant
+  decrement ``lambda`` applied only while the membrane is non-zero,
+  ``v' = v + sum_j w_j s_j - lambda * 1{v != 0}``,
+  followed by the same threshold / reset / refractory logic.
+
+Both are pure functions over a :class:`LIFState`, vectorised over arbitrary
+leading (batch) dimensions, and differentiable through the surrogate spike
+function (:mod:`repro.core.surrogate`).
+
+The integer mode mirrors the FPGA datapath: u8 weights (0-255), i32
+accumulation, integer thresholds -- bit-exact with the register-bank
+contents (:mod:`repro.core.registers`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.surrogate import spike_surrogate
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LIFParams:
+    """Neuron parameters, one entry per neuron (shape ``(n,)`` or scalar).
+
+    Attributes:
+      v_th: firing threshold ``V_th``.
+      leak: Euler mode: ``dt/tau_m`` (decay fraction per tick).
+            Fixed-leak mode: the per-tick decrement ``lambda``.
+      r_ref: refractory length ``R_ref`` in ticks.
+      gain: Euler mode input gain ``dt/C_m``; unused (1.0) in fixed-leak mode.
+      i_bias: tonic bias current ``I_bias``.
+      v_reset: reset potential (paper resets to 0).
+    """
+
+    v_th: jax.Array
+    leak: jax.Array
+    r_ref: jax.Array
+    gain: jax.Array
+    i_bias: jax.Array
+    v_reset: jax.Array
+
+    @staticmethod
+    def make(
+        n: int,
+        *,
+        v_th: float = 1.0,
+        leak: float = 0.0,
+        r_ref: int = 0,
+        gain: float = 1.0,
+        i_bias: float = 0.0,
+        v_reset: float = 0.0,
+        dtype=jnp.float32,
+    ) -> "LIFParams":
+        full = lambda v: jnp.full((n,), v, dtype=dtype)
+        return LIFParams(
+            v_th=full(v_th),
+            leak=full(leak),
+            r_ref=jnp.full((n,), r_ref, dtype=jnp.int32),
+            gain=full(gain),
+            i_bias=full(i_bias),
+            v_reset=full(v_reset),
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LIFState:
+    """Dynamic neuron state with arbitrary leading batch dims.
+
+    Attributes:
+      v: membrane potential ``v[k]``, shape ``(..., n)``.
+      r: refractory counter ``r[k]`` (ticks remaining), shape ``(..., n)``.
+      y: output spikes from the previous tick, shape ``(..., n)``.
+    """
+
+    v: jax.Array
+    r: jax.Array
+    y: jax.Array
+
+    @staticmethod
+    def zeros(batch_shape, n: int, dtype=jnp.float32) -> "LIFState":
+        shape = tuple(batch_shape) + (n,)
+        return LIFState(
+            v=jnp.zeros(shape, dtype=dtype),
+            r=jnp.zeros(shape, dtype=jnp.int32),
+            y=jnp.zeros(shape, dtype=dtype),
+        )
+
+
+def _threshold_reset_refractory(
+    v_tilde: jax.Array,
+    state: LIFState,
+    params: LIFParams,
+    *,
+    surrogate: bool,
+    reset: str = "zero",
+) -> LIFState:
+    """Paper Eq. 2-4: spike, reset, refractory-counter update (shared).
+
+    ``reset``: "zero" (paper Eq. 3: v -> v_reset) or "subtract"
+    (v -> v - V_th on spike; the standard rate-coding-exact hardware
+    variant -- one line of HDL -- used by the classifier readout; see
+    EXPERIMENTS.md §Iris for the deviation note).
+    """
+    not_refractory = (state.r == 0)
+    if surrogate:
+        y_soft = spike_surrogate(v_tilde - params.v_th)
+        y = y_soft * not_refractory.astype(v_tilde.dtype)
+    else:
+        y = ((v_tilde >= params.v_th) & not_refractory).astype(v_tilde.dtype)
+    spiked = y > 0
+    if reset == "subtract":
+        v_after = v_tilde - params.v_th.astype(v_tilde.dtype)
+        v_new = jnp.where(spiked, v_after, v_tilde)
+        v_new = jnp.where(state.r > 0, params.v_reset.astype(v_tilde.dtype), v_new)
+    else:
+        # Eq. 3: v resets if the neuron spiked OR it is still refractory.
+        hold = spiked | (state.r > 0)
+        v_new = jnp.where(hold, params.v_reset.astype(v_tilde.dtype), v_tilde)
+    # Eq. 4: reload the counter on spike, else count down to zero.
+    r_new = jnp.where(spiked, params.r_ref, jnp.maximum(state.r - 1, 0))
+    return LIFState(v=v_new, r=r_new, y=y)
+
+
+def lif_step_euler(
+    state: LIFState,
+    syn_input: jax.Array,
+    params: LIFParams,
+    *,
+    surrogate: bool = False,
+    reset: str = "zero",
+) -> LIFState:
+    """One tick of the Euler LIF model (paper Eq. 1-4).
+
+    Args:
+      state: current :class:`LIFState`.
+      syn_input: summed weighted synaptic drive ``sum_j w_j s_j[k]`` of shape
+        ``(..., n)`` (the synaptic matmul happens outside, or fused in the
+        Pallas kernel).
+      params: :class:`LIFParams`.
+      surrogate: use the differentiable surrogate spike (training).
+    """
+    decay = (1.0 - params.leak).astype(state.v.dtype)
+    v_tilde = decay * state.v + params.gain * (syn_input + params.i_bias)
+    return _threshold_reset_refractory(v_tilde, state, params,
+                                       surrogate=surrogate, reset=reset)
+
+
+def lif_step_fixed_leak(
+    state: LIFState,
+    syn_input: jax.Array,
+    params: LIFParams,
+    *,
+    surrogate: bool = False,
+    reset: str = "zero",
+) -> LIFState:
+    """One tick of the fixed-leak hardware model (paper Eq. 5).
+
+    ``v' = v + sum_j w_j s_j - lambda * 1{v != 0}`` -- the leak is a constant
+    decrement applied only to active (non-zero) membranes, exactly as the
+    FPGA implements it. The decrement never drives ``v`` through zero from
+    the leak alone (the hardware clamps at rest); we clamp the *leak
+    contribution* the same way.
+    """
+    active = (state.v != 0).astype(state.v.dtype)
+    leak_step = params.leak * active
+    # Clamp: leak alone must not overshoot past the resting potential.
+    leak_step = jnp.minimum(leak_step, jnp.abs(state.v))
+    v_tilde = state.v + syn_input + params.i_bias - jnp.sign(state.v) * leak_step
+    return _threshold_reset_refractory(v_tilde, state, params,
+                                       surrogate=surrogate, reset=reset)
+
+
+def lif_step_int(
+    state: LIFState,
+    syn_input: jax.Array,
+    params: LIFParams,
+    *,
+    reset: str = "zero",
+) -> LIFState:
+    """Bit-faithful integer datapath (u8 weights, i32 accumulate).
+
+    Mirrors the FPGA: all quantities are integers, the leak is the fixed
+    decrement, and there is no surrogate (inference only).
+    """
+    v = state.v.astype(jnp.int32)
+    syn = syn_input.astype(jnp.int32) + params.i_bias.astype(jnp.int32)
+    leak = params.leak.astype(jnp.int32)
+    active = (v != 0).astype(jnp.int32)
+    leak_step = jnp.minimum(leak * active, jnp.abs(v))
+    v_tilde = v + syn - jnp.sign(v) * leak_step
+    not_refractory = state.r == 0
+    th = params.v_th.astype(jnp.int32)
+    spiked = (v_tilde >= th) & not_refractory
+    y = spiked.astype(jnp.int32)
+    if reset == "subtract":
+        v_new = jnp.where(spiked, v_tilde - th, v_tilde)
+        v_new = jnp.where(state.r > 0, params.v_reset.astype(jnp.int32), v_new)
+    else:
+        hold = spiked | (state.r > 0)
+        v_new = jnp.where(hold, params.v_reset.astype(jnp.int32), v_tilde)
+    r_new = jnp.where(spiked, params.r_ref, jnp.maximum(state.r - 1, 0))
+    return LIFState(v=v_new, r=r_new, y=y)
+
+
+def lif_step(
+    state: LIFState,
+    syn_input: jax.Array,
+    params: LIFParams,
+    *,
+    mode: str = "fixed_leak",
+    surrogate: bool = False,
+    reset: str = "zero",
+) -> LIFState:
+    """Dispatch on the paper's two formulations (+ integer datapath)."""
+    if mode == "euler":
+        return lif_step_euler(state, syn_input, params, surrogate=surrogate, reset=reset)
+    if mode == "fixed_leak":
+        return lif_step_fixed_leak(state, syn_input, params, surrogate=surrogate, reset=reset)
+    if mode == "int":
+        return lif_step_int(state, syn_input, params, reset=reset)
+    raise ValueError(f"unknown LIF mode: {mode!r}")

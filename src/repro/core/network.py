@@ -1,0 +1,258 @@
+"""The SNN processor core: all-to-all network with scan rollout.
+
+One instance == the paper's ``u_snn_proc`` block: a flat array of N
+homogeneous LIF neurons, a synaptic weight matrix ``W`` gated by the
+connection list ``C``, per-neuron thresholds / leak / refractory registers,
+and optional per-synapse-group delays (paper: 1-255 cycles, default 1).
+
+Semantics: one call to :func:`step` is one synchronous network tick (one
+clock of the FPGA datapath after the 2-cycle neuron pipeline is abstracted
+to a tick). Spikes emitted at tick k arrive at tick k+delay. A rollout over
+T ticks is a ``lax.scan``.
+
+Distribution: ``batch`` shards over ``("pod","data")`` (i.e. ``"data"`` on a
+single pod) and the neuron axis over ``"model"``; the synapse matrix shards
+2-D ``P("model", None)`` on its presynaptic axis so each model shard owns
+the fan-out rows of its neurons. Each tick all-gathers the (tiny, u8)
+spike vector along "model" and computes a local (N x N/16) masked matmul --
+the TPU restatement of the paper's mux fabric (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFParams, LIFState, lif_step
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SNNParams:
+    """Network parameters (all runtime inputs -- never compiled constants).
+
+    Attributes:
+      w: synaptic weights, shape ``(n, n)``; ``w[pre, post]``.
+      c: connection list, shape ``(n, n)`` bool/0-1; ``c[pre, post]``.
+      w_in: input weights, shape ``(n_in, n)`` mapping external channels
+        onto neurons (identity for the paper's networks where inputs drive
+        input-layer neurons directly).
+      lif: per-neuron :class:`LIFParams`.
+    """
+
+    w: jax.Array
+    c: jax.Array
+    w_in: jax.Array
+    lif: LIFParams
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SNNState:
+    """Rollout state: LIF state + circular delay line.
+
+    ``delay_buf`` has shape ``(..., max_delay, n)``; slot ``(k % max_delay)``
+    holds the spikes scheduled to arrive at tick ``k``. ``max_delay == 1``
+    (the hardware default) degenerates to plain previous-tick delivery.
+    """
+
+    lif: LIFState
+    delay_buf: jax.Array
+    tick: jax.Array
+
+    @staticmethod
+    def zeros(batch_shape, n: int, max_delay: int = 1, dtype=jnp.float32) -> "SNNState":
+        return SNNState(
+            lif=LIFState.zeros(batch_shape, n, dtype=dtype),
+            delay_buf=jnp.zeros(tuple(batch_shape) + (max_delay, n), dtype=dtype),
+            tick=jnp.zeros((), dtype=jnp.int32),
+        )
+
+
+def synaptic_input(
+    spikes: jax.Array, params: SNNParams, ext: Optional[jax.Array]
+) -> jax.Array:
+    """``sum_pre s[pre] * W[pre,post] * C[pre,post] (+ ext @ W_in)``.
+
+    The masked matmul *is* the mux fabric: C routes a zero exactly where the
+    hardware's multiplexer would.
+    """
+    wc = params.w * params.c.astype(params.w.dtype)
+    syn = spikes @ wc
+    if ext is not None:
+        syn = syn + ext @ params.w_in
+    return syn
+
+
+def step(
+    state: SNNState,
+    params: SNNParams,
+    ext: Optional[jax.Array] = None,
+    *,
+    mode: str = "fixed_leak",
+    surrogate: bool = False,
+    delays: Optional[jax.Array] = None,
+    backend: str = "jnp",
+) -> SNNState:
+    """One synchronous network tick.
+
+    Args:
+      ext: external drive for this tick, shape ``(..., n_in)`` -- the
+        impulse register contents.
+      delays: optional per-synapse delay in ticks, shape ``(n, n)`` int,
+        values in [1, max_delay]. With delays, presynaptic spikes are
+        written into the delay line and each synapse reads the slot its
+        delay points at.
+      backend: "jnp" (reference) or "pallas" (fused TPU kernel via
+        :mod:`repro.kernels.ops`).
+    """
+    max_delay = state.delay_buf.shape[-2]
+    slot = jnp.mod(state.tick, max_delay)
+
+    if delays is None:
+        # Default 1-cycle delay: read the spikes scheduled for *this* tick.
+        arriving = jax.lax.dynamic_index_in_dim(
+            state.delay_buf, slot, axis=-2, keepdims=False
+        ) if max_delay > 1 else state.lif.y
+        if backend == "pallas":
+            from repro.kernels import ops  # local import; CPU tests use jnp
+
+            lif_state = ops.fused_lif_step(
+                state.lif, arriving, params, ext, mode=mode, surrogate=surrogate
+            )
+        else:
+            syn = synaptic_input(arriving, params, ext)
+            lif_state = lif_step(state.lif, syn, params.lif, mode=mode, surrogate=surrogate)
+    else:
+        # Per-synapse delays: synapse (pre,post) reads slot (tick - delay).
+        # Gather per-delay spike history: hist[d] = spikes emitted d+1 ticks ago.
+        def gather_delay(d):
+            idx = jnp.mod(slot - d, max_delay)
+            return jax.lax.dynamic_index_in_dim(state.delay_buf, idx, axis=-2, keepdims=False)
+
+        hist = jnp.stack([gather_delay(d) for d in range(max_delay)], axis=0)
+        # (max_delay, ..., n_pre) x one-hot(delays-1) -> effective spikes per synapse.
+        onehot = jax.nn.one_hot(delays - 1, max_delay, axis=0, dtype=params.w.dtype)
+        wc = params.w * params.c.astype(params.w.dtype)
+        # syn[..., post] = sum_pre sum_d hist[d, ..., pre] * onehot[d, pre, post] * wc[pre, post]
+        syn = jnp.einsum("d...p,dpq,pq->...q", hist, onehot, wc)
+        if ext is not None:
+            syn = syn + ext @ params.w_in
+        lif_state = lif_step(state.lif, syn, params.lif, mode=mode, surrogate=surrogate)
+
+    # Write freshly emitted spikes into the slot for tick+1 (1-cycle min).
+    if max_delay > 1:
+        write_slot = jnp.mod(state.tick + 1, max_delay)
+        delay_buf = jax.lax.dynamic_update_index_in_dim(
+            state.delay_buf, lif_state.y, write_slot, axis=-2
+        )
+    else:
+        delay_buf = state.delay_buf
+    return SNNState(lif=lif_state, delay_buf=delay_buf, tick=state.tick + 1)
+
+
+def rollout(
+    params: SNNParams,
+    state: SNNState,
+    ext_seq: Optional[jax.Array],
+    n_ticks: int,
+    *,
+    mode: str = "fixed_leak",
+    surrogate: bool = False,
+    delays: Optional[jax.Array] = None,
+    backend: str = "jnp",
+) -> Tuple[SNNState, jax.Array]:
+    """Scan ``n_ticks`` network ticks; returns final state + spike raster.
+
+    ``ext_seq`` is ``(n_ticks, ..., n_in)`` or None (autonomous dynamics).
+    The raster has shape ``(n_ticks, ..., n)``.
+    """
+
+    def body(st, ext):
+        st2 = step(
+            st, params, ext, mode=mode, surrogate=surrogate, delays=delays, backend=backend
+        )
+        return st2, st2.lif.y
+
+    if ext_seq is None:
+        return jax.lax.scan(body, state, None, length=n_ticks)
+    return jax.lax.scan(body, state, ext_seq)
+
+
+def forward_layered(
+    params: SNNParams,
+    spikes_in: jax.Array,
+    layer_sizes,
+    n_ticks: Optional[int] = None,
+    *,
+    mode: str = "fixed_leak",
+    surrogate: bool = False,
+    backend: str = "jnp",
+) -> Tuple[jax.Array, SNNState]:
+    """The paper's inference pattern: clamp input-layer drive, tick until
+    the wavefront crosses all layers, read output-layer spikes.
+
+    Latency accounting (paper §II.C): 1 tick of input sampling + 1 tick per
+    layer crossing => ``depth`` ticks here; the hardware charges 2 clock
+    cycles per layer within a tick (5 clocks end-to-end for 2 layers),
+    reproduced in benchmarks/bench_latency.py.
+
+    Args:
+      spikes_in: ``(..., n_in)`` external drive, clamped for all ticks
+        (level coding) -- or ``(T, ..., n_in)`` for a spike train.
+    Returns:
+      (output spike raster ``(T, ..., n_out)``, final state).
+    """
+    n = params.w.shape[0]
+    depth = len(layer_sizes)
+    if n_ticks is None:
+        n_ticks = depth + 1
+    batch_shape = spikes_in.shape[:-1] if spikes_in.ndim >= 1 else ()
+    if spikes_in.ndim >= 2 and spikes_in.shape[0] == n_ticks and n_ticks > 1:
+        ext_seq = spikes_in
+        batch_shape = spikes_in.shape[1:-1]
+    else:
+        ext_seq = jnp.broadcast_to(
+            spikes_in[None], (n_ticks,) + spikes_in.shape
+        )
+        batch_shape = spikes_in.shape[:-1]
+    state = SNNState.zeros(batch_shape, n, dtype=params.w.dtype)
+    final, raster = rollout(
+        params, state, ext_seq, n_ticks, mode=mode, surrogate=surrogate, backend=backend
+    )
+    n_out = layer_sizes[-1]
+    return raster[..., n - n_out :], final
+
+
+def params_from_registers(bank, *, dtype=jnp.float32) -> SNNParams:
+    """Build runtime params straight from a :class:`RegisterBank`.
+
+    The per-neuron weight layout (paper's 898-txn encoding) broadcasts the
+    postsynaptic neuron's weight byte across its fan-in; per-synapse layout
+    uses the full matrix.
+    """
+    import numpy as np
+
+    n = bank.n
+    c = bank.get_connection_list().astype(np.float32)
+    if bank.weights.ndim == 1:
+        w = np.broadcast_to(bank.weights.astype(np.float32)[None, :], (n, n)).copy()
+    else:
+        w = bank.weights.astype(np.float32)
+    lif = LIFParams(
+        v_th=jnp.asarray(bank.thresholds, dtype),
+        leak=jnp.asarray(bank.leak, dtype),
+        r_ref=jnp.asarray(bank.refractory, jnp.int32),
+        gain=jnp.ones((n,), dtype),
+        i_bias=jnp.zeros((n,), dtype),
+        v_reset=jnp.zeros((n,), dtype),
+    )
+    return SNNParams(
+        w=jnp.asarray(w, dtype),
+        c=jnp.asarray(c, dtype),
+        w_in=jnp.eye(n, dtype=dtype),
+        lif=lif,
+    )

@@ -1,0 +1,71 @@
+"""u8 weight quantization -- the FPGA's integer datapath.
+
+The hardware stores synaptic weights as integers in [0, 255] (paper §II.A)
+and thresholds as 8-bit registers. Research-mode training uses floats; this
+module maps trained float weights onto the hardware grid so the register
+bank holds *exactly* what the FPGA would, and inference through
+``lif_step_int`` is bit-faithful.
+
+Scheme: symmetric-positive affine. Weights here are non-negative
+(excitatory-only hardware); signed nets are shifted by bias neurons before
+download (``quantize_signed`` handles the split).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+WEIGHT_MAX = 255
+THRESH_MAX = 255
+
+
+class QuantizedWeights(NamedTuple):
+    q: jax.Array       # u8 weights
+    scale: jax.Array   # float scale: w ~= q * scale
+
+
+def quantize_u8(w: jax.Array, w_max: float | None = None) -> QuantizedWeights:
+    """Quantize non-negative float weights to u8 with a shared scale."""
+    w = jnp.maximum(w, 0.0)
+    if w_max is None:
+        w_max = jnp.maximum(jnp.max(w), 1e-8)
+    scale = w_max / WEIGHT_MAX
+    q = jnp.clip(jnp.round(w / scale), 0, WEIGHT_MAX).astype(jnp.uint8)
+    return QuantizedWeights(q=q, scale=jnp.asarray(scale, jnp.float32))
+
+
+def dequantize_u8(qw: QuantizedWeights) -> jax.Array:
+    return qw.q.astype(jnp.float32) * qw.scale
+
+
+def quantize_signed(w: jax.Array) -> Tuple[QuantizedWeights, QuantizedWeights]:
+    """Split a signed weight matrix into excitatory / inhibitory u8 banks.
+
+    The FPGA fabric is excitatory-only per synapse; inhibition is realized
+    by a parallel bank whose contribution is subtracted in the accumulator.
+    Returns ``(excitatory, inhibitory)`` quantized with a shared scale so
+    the integer difference reproduces the signed sum.
+    """
+    w_max = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    pos = quantize_u8(jnp.maximum(w, 0.0), w_max)
+    neg = quantize_u8(jnp.maximum(-w, 0.0), w_max)
+    return pos, neg
+
+
+def quantize_threshold(v_th: jax.Array, scale: jax.Array) -> jax.Array:
+    """Thresholds live on the same integer grid as the weights."""
+    return jnp.clip(jnp.round(v_th / scale), 1, THRESH_MAX).astype(jnp.uint8)
+
+
+def integer_network(w: jax.Array, v_th: jax.Array):
+    """Convenience: signed float net -> (w_int i32, v_th i32, scale).
+
+    ``w_int = q_pos - q_neg`` accumulated in i32 -- exactly the two-bank
+    hardware sum. Thresholds are quantized on the shared scale.
+    """
+    pos, neg = quantize_signed(w)
+    w_int = pos.q.astype(jnp.int32) - neg.q.astype(jnp.int32)
+    th_int = quantize_threshold(v_th, pos.scale).astype(jnp.int32)
+    return w_int, th_int, pos.scale

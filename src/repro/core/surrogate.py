@@ -1,0 +1,42 @@
+"""Surrogate-gradient spike function.
+
+The paper programs weights from the host (inference-only hardware). To
+*validate* the paper's accuracy claims end-to-end without hand-tuned
+weights, we train the SNN offline with surrogate-gradient BPTT and then
+quantize + download the weights through the register bank -- the same
+workflow the authors used (host-side Python prepares all parameters).
+
+Forward: Heaviside step.  Backward: fast-sigmoid surrogate
+(SuperSpike, Zenke & Ganguli 2018): ``d/dx H(x) ~= 1 / (beta*|x| + 1)^2``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BETA = 10.0
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def spike_surrogate(x: jax.Array, beta: float = DEFAULT_BETA) -> jax.Array:
+    """Heaviside forward / fast-sigmoid backward."""
+    return (x >= 0).astype(x.dtype)
+
+
+def _fwd(x, beta):
+    return spike_surrogate(x, beta), x
+
+
+def _bwd(beta, x, g):
+    surr = 1.0 / (beta * jnp.abs(x) + 1.0) ** 2
+    return (g * surr.astype(g.dtype),)
+
+
+spike_surrogate.defvjp(_fwd, _bwd)
+
+
+def spike_hard(x: jax.Array) -> jax.Array:
+    """Non-differentiable Heaviside (inference datapath)."""
+    return (x >= 0).astype(x.dtype)

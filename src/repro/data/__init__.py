@@ -1,0 +1,3 @@
+from repro.data import synthetic, iris, mnist, pipeline
+
+__all__ = ["synthetic", "iris", "mnist", "pipeline"]

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every kernel in this package must match its oracle here to
+``assert_allclose`` tolerances across the shape/dtype sweep in
+``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def spike_matmul_ref(
+    s: jax.Array, w: jax.Array, c: jax.Array
+) -> jax.Array:
+    """Masked synaptic matmul: ``s @ (w * c)``, f32 accumulation.
+
+    ``s``: (B, N_pre) spikes in {0,1} (any float dtype).
+    ``w``: (N_pre, N_post) synaptic weights.
+    ``c``: (N_pre, N_post) connection list in {0,1}.
+    """
+    wc = (w * c.astype(w.dtype)).astype(jnp.float32)
+    return jnp.dot(s.astype(jnp.float32), wc)
+
+
+class LIFStepOut(NamedTuple):
+    v: jax.Array
+    r: jax.Array
+    y: jax.Array
+
+
+def fused_lif_step_ref(
+    s: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    v: jax.Array,
+    r: jax.Array,
+    drive: Optional[jax.Array],
+    v_th: jax.Array,
+    leak: jax.Array,
+    r_ref: jax.Array,
+    gain: jax.Array,
+    i_bias: jax.Array,
+    v_reset: jax.Array,
+    *,
+    mode: str = "fixed_leak",
+) -> LIFStepOut:
+    """Fused tick: synaptic matmul + LIF threshold/reset/refractory.
+
+    Shapes: ``s, v, drive``: (B, N); ``r``: (B, N) i32; per-neuron params (N,).
+    ``drive`` is the precomputed external input ``ext @ w_in`` (or None).
+    Matches ``repro.core.lif.lif_step(..., surrogate=False)`` composed with
+    ``repro.core.network.synaptic_input``.
+    """
+    syn = spike_matmul_ref(s, w, c)
+    if drive is not None:
+        syn = syn + drive.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if mode == "euler":
+        v_tilde = (1.0 - leak) * vf + gain * (syn + i_bias)
+    elif mode == "fixed_leak":
+        active = (vf != 0).astype(jnp.float32)
+        leak_step = jnp.minimum(leak * active, jnp.abs(vf))
+        v_tilde = vf + syn + i_bias - jnp.sign(vf) * leak_step
+    else:
+        raise ValueError(mode)
+    not_ref = r == 0
+    spiked = (v_tilde >= v_th) & not_ref
+    y = spiked.astype(v.dtype)
+    hold = spiked | (r > 0)
+    v_new = jnp.where(hold, v_reset, v_tilde).astype(v.dtype)
+    r_new = jnp.where(spiked, r_ref, jnp.maximum(r - 1, 0)).astype(r.dtype)
+    return LIFStepOut(v=v_new, r=r_new, y=y)
+
+
+def event_spike_matmul_ref(
+    s: jax.Array, w: jax.Array, c: jax.Array, k_active: int
+) -> jax.Array:
+    """Event-driven oracle: identical result to :func:`spike_matmul_ref`
+    provided at most ``k_active`` presynaptic neurons spike per batch row
+    (the beyond-paper sparse-dispatch path gathers only active fan-outs)."""
+    return spike_matmul_ref(s, w, c)

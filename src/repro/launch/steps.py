@@ -1,0 +1,211 @@
+"""Step functions (train / prefill / decode) + their sharding trees.
+
+This is the seam between the model library and the distributed runtime:
+everything the dry-run lowers, the trainer executes, and the roofline
+analyzes comes from here, so the compiled artifact and the production step
+are the same program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.common import logical_axes, shape_structs
+from repro.optim import adafactor, adamw, clip, schedule
+from repro.parallel.sharding import AxisRules, constrain, use_rules
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any  # AdamWState | AdafactorState
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+
+
+def param_shardings(cfg: ModelConfig, rules: AxisRules):
+    axes = logical_axes(M.specs(cfg))
+    return jax.tree.map(lambda a: rules.sharding(a), axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _axes_tree(cfg: ModelConfig):
+    return logical_axes(M.specs(cfg))
+
+
+def opt_shardings(cfg: ModelConfig, rules: AxisRules, optimizer: str):
+    p_axes = _axes_tree(cfg)
+    is_axes = lambda x: isinstance(x, tuple)
+    rep = rules.sharding(())
+    if optimizer == "adamw":
+        mom = jax.tree.map(lambda a: rules.sharding(a), p_axes, is_leaf=is_axes)
+        return adamw.AdamWState(step=rep, m=mom, v=mom)
+    if optimizer == "adafactor":
+        vr = jax.tree.map(lambda a: rules.sharding(a[:-1]), p_axes, is_leaf=is_axes)
+        vc = jax.tree.map(
+            lambda a: rules.sharding(a[:-2] + a[-1:]) if len(a) >= 2 else rep,
+            p_axes, is_leaf=is_axes)
+        return adafactor.AdafactorState(step=rep, vr=vr, vc=vc)
+    raise ValueError(optimizer)
+
+
+def state_shardings(cfg: ModelConfig, rules: AxisRules, pcfg: ParallelConfig):
+    return TrainState(
+        params=param_shardings(cfg, rules),
+        opt=opt_shardings(cfg, rules, pcfg.optimizer),
+    )
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules):
+    specs = M.batch_specs(cfg, shape)
+    from repro.models.common import Spec, is_spec
+    return jax.tree.map(lambda s: rules.sharding(s.axes), specs, is_leaf=is_spec)
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules):
+    specs = M.make_cache_specs(cfg, shape.global_batch, shape.seq_len)
+    from repro.models.common import is_spec
+    return jax.tree.map(lambda s: rules.sharding(s.axes), specs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# struct builders (dry-run stand-ins; no allocation)
+
+
+def state_structs(cfg: ModelConfig, pcfg: ParallelConfig, rules: Optional[AxisRules]):
+    p = shape_structs(M.specs(cfg), M.dtype_of(cfg), rules)
+    zero = lambda sds: sds  # already structs
+    if pcfg.optimizer == "adamw":
+        sd = jnp.dtype(pcfg.opt_state_dtype)
+        mom_axes = _axes_tree(cfg)
+        def mom_struct(spec_axes, leaf):
+            sharding = rules.sharding(spec_axes) if rules else None
+            return jax.ShapeDtypeStruct(leaf.shape, sd, sharding=sharding)
+        m = jax.tree.map(mom_struct, mom_axes, p,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        step = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=rules.sharding(()) if rules else None)
+        opt = adamw.AdamWState(step=step, m=m, v=m)
+    else:
+        axes = _axes_tree(cfg)
+        is_axes = lambda x: isinstance(x, tuple)
+        def vr_struct(a, leaf):
+            sharding = rules.sharding(a[:-1]) if rules else None
+            return jax.ShapeDtypeStruct(leaf.shape[:-1], jnp.float32, sharding=sharding)
+        def vc_struct(a, leaf):
+            if len(leaf.shape) >= 2:
+                sharding = rules.sharding(a[:-2] + a[-1:]) if rules else None
+                return jax.ShapeDtypeStruct(
+                    leaf.shape[:-2] + leaf.shape[-1:], jnp.float32, sharding=sharding)
+            sharding = rules.sharding(()) if rules else None
+            return jax.ShapeDtypeStruct((), jnp.float32, sharding=sharding)
+        vr = jax.tree.map(vr_struct, axes, p, is_leaf=is_axes)
+        vc = jax.tree.map(vc_struct, axes, p, is_leaf=is_axes)
+        step = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=rules.sharding(()) if rules else None)
+        opt = adafactor.AdafactorState(step=step, vr=vr, vc=vc)
+    return TrainState(params=p, opt=opt)
+
+
+def params_structs(cfg: ModelConfig, rules: Optional[AxisRules] = None):
+    return shape_structs(M.specs(cfg), M.dtype_of(cfg), rules)
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeConfig, rules: Optional[AxisRules]):
+    return shape_structs(M.batch_specs(cfg, shape), M.dtype_of(cfg), rules)
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeConfig, rules: Optional[AxisRules]):
+    return shape_structs(
+        M.make_cache_specs(cfg, shape.global_batch, shape.seq_len),
+        M.dtype_of(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    *,
+    peak_lr: float = 3e-4,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    max_grad_norm: float = 1.0,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    micro = max(1, pcfg.microbatches)
+    grad_accum_dtype = jnp.dtype(pcfg.grad_accum_dtype)
+
+    def loss_of(params, mb):
+        return M.loss_fn(params, cfg, mb, remat=pcfg.remat)
+
+    def train_step(state: TrainState, batch):
+        if micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(
+                state.params, batch)
+        else:
+            def split_mb(x):
+                y = x.reshape((micro, x.shape[0] // micro) + x.shape[1:])
+                return y
+
+            mbs = jax.tree.map(split_mb, batch)
+
+            def accum(carry, mb):
+                gsum, lsum, aux_sum = carry
+                (loss, metrics), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    state.params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(grad_accum_dtype), gsum, g)
+                return (gsum, lsum + loss, aux_sum + metrics["router_aux"]), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, grad_accum_dtype), state.params)
+            (gsum, lsum, aux_sum), _ = jax.lax.scan(
+                accum, (gzero, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                mbs)
+            grads = jax.tree.map(lambda g: g / micro, gsum)
+            loss = lsum / micro
+            metrics = {"nll": loss, "router_aux": aux_sum / micro}
+
+        grads, gnorm = clip.clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule.warmup_cosine(
+            state.opt.step, peak_lr=peak_lr,
+            warmup_steps=warmup_steps, total_steps=total_steps)
+        if pcfg.optimizer == "adamw":
+            new_params, new_opt = adamw.update(grads, state.opt, state.params, lr=lr)
+        else:
+            new_params, new_opt = adafactor.update(grads, state.opt, state.params, lr=lr)
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm, "lr": lr})
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch, caches):
+        return M.prefill_fn(params, cfg, batch, caches)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, batch, caches):
+        return M.decode_fn(params, cfg, batch, caches)
+    return decode_step
+
+
+def init_train_state(cfg: ModelConfig, pcfg: ParallelConfig, key) -> TrainState:
+    params = M.init(cfg, key)
+    if pcfg.optimizer == "adamw":
+        opt = adamw.init(params, jnp.dtype(pcfg.opt_state_dtype))
+    else:
+        opt = adafactor.init(params)
+    return TrainState(params=params, opt=opt)

@@ -1,0 +1,3 @@
+from repro.models import attention, common, ffn, model, rwkv, ssm, transformer
+
+__all__ = ["attention", "common", "ffn", "model", "rwkv", "ssm", "transformer"]

@@ -1,0 +1,259 @@
+"""GQA attention with head-aligned tensor parallelism.
+
+Sharding design (EXPERIMENTS.md §Perf iteration 1):
+
+* **Q side**: projection columns are padded to ``head_pad`` (= TP width, 16)
+  whole heads -- ``Hqp = ceil(Hq/16)*16`` -- so the flat->heads reshape is
+  always shard-aligned (each model shard owns ``Hqp/16`` complete heads).
+  Dead pad heads are hard-masked after attention (exact semantics; their
+  FLOPs show up honestly in the roofline's useful-ratio). Without this,
+  GSPMD hits "involuntary full rematerialization" on the misaligned
+  reshape and replicates multi-GB activations per layer (measured: 2.1 TB
+  of all-reduce per device on llama4 prefill_32k, 16x attention FLOP
+  waste on smollm -- see EXPERIMENTS.md before/after).
+
+* **KV side**: every assigned arch has kv_heads < 16, so KV is never
+  TP-sharded. K/V projections are small and computed *replicated* on each
+  model shard (zero communication); each q head gathers its kv head
+  locally via a constant index map (GQA grouping).
+
+* **KV cache**: stored flat (B, S, Hkv*Dh) and sharded along **kv_seq**
+  (flash-decoding style): decode computes shard-local partial attention
+  over its sequence slice; the softmax reduction and PV combine are
+  tiny cross-shard collectives (B x Hq x Dh scale, not cache scale).
+
+Memory discipline: for q_len > ``Q_CHUNK`` a ``lax.scan`` over query
+chunks bounds the transient score matrix at (chunk x S) per head.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Spec, apply_rope, rms_norm
+from repro.parallel.sharding import constrain
+
+Q_CHUNK = 512
+NEG_INF = -1e30
+
+
+def padded_q_heads(cfg: ModelConfig) -> int:
+    pad = max(1, cfg.head_pad)
+    return -(-cfg.n_heads // pad) * pad
+
+
+def head_maps(cfg: ModelConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """(head_to_kv index map, live-head mask) over padded q heads."""
+    hqp = padded_q_heads(cfg)
+    g = max(1, cfg.n_heads // cfg.n_kv_heads)
+    to_kv = np.asarray(
+        [min(h // g, cfg.n_kv_heads - 1) for h in range(hqp)], np.int32)
+    mask = np.asarray([1.0 if h < cfg.n_heads else 0.0 for h in range(hqp)],
+                      np.float32)
+    return to_kv, mask
+
+
+def attn_specs(cfg: ModelConfig, *, cross: bool = False) -> Dict[str, Spec]:
+    d, hkv, dh = cfg.d_model, cfg.n_kv_heads, cfg.d_head
+    hqp = padded_q_heads(cfg)
+    s = {
+        "ln": Spec((d,), ("norm",), "ones"),
+        "wq": Spec((d, hqp * dh), ("qkv_in", "q_heads")),
+        "wk": Spec((d, hkv, dh), ("qkv_in", None, None)),
+        "wv": Spec((d, hkv, dh), ("qkv_in", None, None)),
+        "wo": Spec((hqp * dh, d), ("q_heads", "qkv_in")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = Spec((dh,), ("norm",), "ones")
+        s["k_norm"] = Spec((dh,), ("norm",), "ones")
+    return s
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, H_kv * Dh)  -- flat, kv_seq-sharded
+    v: jax.Array
+
+
+def _project_q(x, p, cfg: ModelConfig, positions, *, shard_heads: bool):
+    b, sq = x.shape[0], x.shape[1]
+    hqp, dh = padded_q_heads(cfg), cfg.d_head
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    if shard_heads:
+        q = constrain(q, "batch", None, "act_heads")
+    q = q.reshape(b, sq, hqp, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+    if cfg.pos_embed == "rope" and positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def _project_kv(x, p, cfg: ModelConfig, kv_positions):
+    """Replicated (per model shard) K/V projection; (B, T, Hkv, Dh)."""
+    k = jnp.einsum("btd,dhn->bthn", x, p["wk"])
+    v = jnp.einsum("btd,dhn->bthn", x, p["wv"])
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"])
+    if cfg.pos_embed == "rope" and kv_positions is not None:
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return k, v
+
+
+def _expand_kv(k: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Gather each (padded) q head's kv head: (B,T,Hkv,Dh) -> (B,T,Hqp,Dh).
+
+    A local take along the (replicated) head axis -- no communication.
+    """
+    to_kv, _ = head_maps(cfg)
+    return jnp.take(k, jnp.asarray(to_kv), axis=2)
+
+
+def _mask_heads(out: jax.Array, cfg: ModelConfig) -> jax.Array:
+    _, mask = head_maps(cfg)
+    if mask.min() >= 1.0:
+        return out
+    return out * jnp.asarray(mask, out.dtype)[None, None, :, None]
+
+
+def _sdpa(q, ke, ve, *, causal: bool, q_offset) -> jax.Array:
+    """q, ke, ve: (B, *, Hqp, Dh) -- kv already expanded to q heads."""
+    b, sq, hqp, dh = q.shape
+    t = ke.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bshd,bthd->bhst", q, ke).astype(jnp.float32) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(t)
+        mask = kpos[None, :] <= qpos[:, None]            # (sq, t)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(ve.dtype)
+    return jnp.einsum("bhst,bthd->bshd", w, ve)
+
+
+def _sdpa_chunked(q, ke, ve, *, causal: bool) -> jax.Array:
+    """lax.scan over query chunks; transient score memory = chunk x T."""
+    b, sq, hqp, dh = q.shape
+    n_chunks = sq // Q_CHUNK
+    assert sq % Q_CHUNK == 0, f"seq {sq} not divisible by q-chunk {Q_CHUNK}"
+    qc = q.reshape(b, n_chunks, Q_CHUNK, hqp, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(_, args):
+        i, q_i = args
+        o = _sdpa(q_i, ke, ve, causal=causal, q_offset=i * Q_CHUNK)
+        return None, o
+
+    _, out = jax.lax.scan(body, None, (jnp.arange(n_chunks), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, hqp, dh)
+
+
+def self_attention(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    cache: Optional[KVCache] = None,
+    cache_pos=None,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Pre-norm residual self-attention sublayer.
+
+    Train/prefill: ``cache is None`` -> causal attention over x itself
+    (returns fresh flat K/V as a cache when ``cache_pos == 'prefill'``).
+    Decode: ``cache`` given, x is (B, q_len, D) at position ``cache_pos``.
+    """
+    b = x.shape[0]
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    hqp = padded_q_heads(cfg)
+    h = rms_norm(x, p["ln"])
+    h = constrain(h, "batch", "seq", "embed")
+
+    if cache is None or cache_pos == "prefill":
+        q = _project_q(h, p, cfg, positions, shard_heads=True)
+        k, v = _project_kv(h, p, cfg, positions)
+        ke, ve = _expand_kv(k, cfg), _expand_kv(v, cfg)
+        sq = q.shape[1]
+        if sq > Q_CHUNK:
+            out = _sdpa_chunked(q, ke, ve, causal=True)
+        else:
+            out = _sdpa(q, ke, ve, causal=True, q_offset=0)
+        new_cache = None
+        if cache_pos == "prefill":
+            k_flat = constrain(k.reshape(b, sq, hkv * dh), "batch", "kv_seq", None)
+            v_flat = constrain(v.reshape(b, sq, hkv * dh), "batch", "kv_seq", None)
+            new_cache = KVCache(k=k_flat, v=v_flat)
+    else:
+        # Decode: q is tiny -> replicated over model; cache is kv_seq-sharded.
+        q = _project_q(h, p, cfg, positions, shard_heads=False)
+        k_new, v_new = _project_kv(h, p, cfg, positions)
+        q_len = q.shape[1]
+        k_flat = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.reshape(b, q_len, hkv * dh).astype(cache.k.dtype),
+            cache_pos, axis=1)
+        v_flat = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.reshape(b, q_len, hkv * dh).astype(cache.v.dtype),
+            cache_pos, axis=1)
+        k_flat = constrain(k_flat, "batch", "kv_seq", None)
+        v_flat = constrain(v_flat, "batch", "kv_seq", None)
+        t = k_flat.shape[1]
+        ke = _expand_kv(k_flat.reshape(b, t, hkv, dh), cfg)
+        ve = _expand_kv(v_flat.reshape(b, t, hkv, dh), cfg)
+        kpos = jnp.arange(t)
+        valid = jnp.broadcast_to(kpos[None, :] <= cache_pos + q_len - 1, (b, t))
+        out = _decode_sdpa(q, ke, ve, valid)
+        new_cache = KVCache(k=k_flat, v=v_flat)
+
+    out = _mask_heads(out, cfg)
+    out = out.reshape(b, -1, hqp * dh)
+    if cache is None or cache_pos == "prefill":
+        out = constrain(out, "batch", None, "act_heads")
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    y = constrain(y, "batch", "seq", "embed")
+    return x + y, new_cache
+
+
+def _decode_sdpa(q, ke, ve, valid) -> jax.Array:
+    """q: (B, q_len, Hqp, Dh) vs kv_seq-sharded expanded cache."""
+    b, sq, hqp, dh = q.shape
+    t = ke.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bshd,bthd->bhst", q, ke).astype(jnp.float32) * scale
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(ve.dtype)
+    return jnp.einsum("bhst,bthd->bshd", w, ve)
+
+
+def cross_attention(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    kv_cache: KVCache,
+) -> jax.Array:
+    """Cross-attention over precomputed (cached) flat vision K/V."""
+    b, sq = x.shape[0], x.shape[1]
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    hqp = padded_q_heads(cfg)
+    h = rms_norm(x, p["ln"])
+    q = _project_q(h, p, cfg, None, shard_heads=True)
+    t = kv_cache.k.shape[1]
+    ke = _expand_kv(kv_cache.k.reshape(b, t, hkv, dh), cfg)
+    ve = _expand_kv(kv_cache.v.reshape(b, t, hkv, dh), cfg)
+    out = _sdpa(q, ke, ve, causal=False, q_offset=0)
+    out = _mask_heads(out, cfg)
+    out = out.reshape(b, sq, hqp * dh)
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return x + y
+
+
+def project_vision_kv(vision_proj: jax.Array, p: Dict[str, jax.Array],
+                      cfg: ModelConfig) -> KVCache:
+    """Project (already d_model-projected) vision tokens to flat K/V."""
+    b, t = vision_proj.shape[0], vision_proj.shape[1]
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    k, v = _project_kv(vision_proj, p, cfg, None)
+    return KVCache(k=k.reshape(b, t, hkv * dh), v=v.reshape(b, t, hkv * dh))

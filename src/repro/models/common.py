@@ -1,0 +1,141 @@
+"""Shared model machinery: param specs, init, norms, rotary embeddings.
+
+Parameters are plain pytrees (nested dicts of arrays). Each leaf is
+described once by a :class:`Spec` carrying shape, *logical axes* (for
+sharding) and init style; ``init_params`` and ``logical_axes`` both derive
+from the same spec tree, so sharding annotations can never drift from the
+parameter structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | small
+    scale: float = 1.0         # fan-in override multiplier
+    dtype: Optional[str] = None  # override model dtype (e.g. f32 SSM states)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape/axes rank mismatch: {self.shape} vs {self.axes}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.bfloat16):
+    """Materialize a spec tree. Weight init: truncated-normal style
+    1/sqrt(fan_in) (fan_in = product of all but the last dim)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        leaf_dtype = spec.dtype or dtype
+        if spec.init == "zeros":
+            a = jnp.zeros(spec.shape, leaf_dtype)
+        elif spec.init == "ones":
+            a = jnp.ones(spec.shape, leaf_dtype)
+        else:
+            fan_in = max(1, math.prod(spec.shape[:-1]) if len(spec.shape) > 1 else spec.shape[0])
+            std = spec.scale / math.sqrt(fan_in)
+            if spec.init == "small":
+                std = spec.scale * 0.02
+            a = (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(leaf_dtype)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out)
+
+
+def zeros_params(specs, dtype=jnp.bfloat16):
+    """All-zeros materialization (cache init)."""
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype or dtype)),
+        specs, is_leaf=is_spec)
+
+
+def shape_structs(specs, dtype=jnp.bfloat16, rules=None):
+    """ShapeDtypeStructs (+ shardings if rules given) for AOT lowering."""
+    def mk(s: Spec):
+        sharding = rules.sharding(s.axes) if rules is not None else None
+        return jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or dtype), sharding=sharding)
+    return jax.tree.map(mk, specs, is_leaf=is_spec)
+
+
+def stack_specs(specs, n: int, axis_name: Optional[str] = "groups"):
+    """Prepend a stacking dim (for scan-over-groups) to every leaf spec."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale, s.dtype),
+        specs, is_leaf=is_spec)
+
+
+def logical_axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def shapes_of(specs):
+    return jax.tree.map(lambda s: s.shape, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, d_head); positions: (..., seq) int32."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                      # (d_head/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, d/2)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., seq, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_embed(positions: jax.Array, d_model: int) -> jax.Array:
+    """MusicGen-style absolute sinusoidal embedding; positions (..., seq)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token NLL; logits in any float dtype (softmax in f32)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)

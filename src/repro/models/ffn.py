@@ -1,0 +1,135 @@
+"""FFN sublayers: SwiGLU dense + top-k MoE with capacity-based dispatch.
+
+The MoE dispatch *is* the paper's connection-list idea at LM scale: the
+router writes a (token -> expert) gating mask at runtime, and dispatch is
+a masked einsum against that mask -- compute flows only where the
+"connection list" routes it, and reconfiguring the routing (new router
+weights / new mask) never recompiles the program. DESIGN.md §5.
+
+Dispatch follows GShard/MaxText: tokens are split into groups of
+``group_tokens``; each expert accepts ``capacity = top_k * group_tokens *
+capacity_factor / n_experts`` tokens per group (overflow dropped). The
+one-hot dispatch tensor is (G, T_g, E, C) -- group size bounds its memory.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Spec, rms_norm, silu
+from repro.parallel.sharding import constrain
+
+MOE_GROUP_TOKENS = 512
+
+
+def dense_ffn_specs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Spec]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s = {
+        "ln": Spec((d,), ("norm",), "ones"),
+        "w_up": Spec((d, f), ("mlp_in", "mlp")),
+        "w_down": Spec((f, d), ("mlp", "mlp_in")),
+    }
+    if cfg.ffn_act == "swiglu":
+        s["w_gate"] = Spec((d, f), ("mlp_in", "mlp"))
+    return s
+
+
+def dense_ffn(x: jax.Array, p: Dict[str, jax.Array]) -> jax.Array:
+    h = rms_norm(x, p["ln"])
+    h = constrain(h, "batch", "seq", "embed")
+    u = jnp.einsum("bsd,df->bsf", h, p["w_up"])
+    if "w_gate" in p:  # SwiGLU
+        g = jnp.einsum("bsd,df->bsf", h, p["w_gate"])
+        a = silu(g) * u
+    else:              # non-gated GELU (starcoder2)
+        a = jax.nn.gelu(u, approximate=True)
+    a = constrain(a, "batch", None, "act_mlp")
+    y = jnp.einsum("bsf,fd->bsd", a, p["w_down"])
+    return x + constrain(y, "batch", "seq", "embed")
+
+
+def moe_ffn_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = {
+        "ln": Spec((d,), ("norm",), "ones"),
+        "router": Spec((d, e), (None, "experts"), "small"),
+        "w_gate": Spec((e, d, f), ("experts", "expert_in", "expert_mlp")),
+        "w_up": Spec((e, d, f), ("experts", "expert_in", "expert_mlp")),
+        "w_down": Spec((e, f, d), ("experts", "expert_mlp", "expert_in")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        s["shared"] = {
+            "w_gate": Spec((d, fs), ("mlp_in", "mlp")),
+            "w_up": Spec((d, fs), ("mlp_in", "mlp")),
+            "w_down": Spec((fs, d), ("mlp", "mlp_in")),
+        }
+    return s
+
+
+DECODE_CAPACITY_FACTOR = 4.0  # serving headroom: dropless in practice
+
+
+def _capacity(cfg: ModelConfig, group_tokens: int, cap_factor: float) -> int:
+    c = int(math.ceil(cfg.top_k * group_tokens * cap_factor / cfg.n_experts))
+    return max(c, cfg.top_k)
+
+
+def moe_ffn(
+    x: jax.Array, p: Dict[str, jax.Array], cfg: ModelConfig,
+    cap_factor: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux load-balance loss)."""
+    b, s, d = x.shape
+    h = rms_norm(x, p["ln"])
+
+    t_total = b * s
+    g_tok = min(MOE_GROUP_TOKENS, t_total)
+    assert t_total % g_tok == 0, f"tokens {t_total} not divisible by group {g_tok}"
+    n_groups = t_total // g_tok
+    e = cfg.n_experts
+    cap = _capacity(cfg, g_tok, cap_factor or cfg.capacity_factor)
+
+    ht = h.reshape(n_groups, g_tok, d)
+    ht = constrain(ht, "batch", None, "embed")
+    logits = jnp.einsum("gtd,de->gte", ht, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)          # (G, T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Reduce the K claims to per-(token, expert) masks first (a token picks
+    # each expert at most once) so no (T, K, E, C) tensor ever exists.
+    onehot_k = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)      # (G, T, K, E)
+    expert_mask = onehot_k.sum(axis=2)                               # (G, T, E) in {0,1}
+    gate_e = (onehot_k * gate_vals[..., None]).sum(axis=2)           # (G, T, E)
+    # Slot of token t in expert e's capacity buffer (token-index order).
+    pos = jnp.cumsum(expert_mask, axis=1) - expert_mask              # (G, T, E)
+    # one_hot of pos >= cap is all-zeros -> overflow tokens drop out.
+    slot = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=x.dtype)  # (G, T, E, C)
+    dispatch = slot * expert_mask.astype(x.dtype)[..., None]         # (G, T, E, C)
+    combine = dispatch * gate_e.astype(x.dtype)[..., None]
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, ht)                  # (G, E, C, D)
+    xe = constrain(xe, "batch", "experts", None, "embed")
+    gg = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    uu = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", silu(gg) * uu, p["w_down"])
+    ye = constrain(ye, "batch", "experts", None, "embed")
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    y = y.reshape(b, s, d)
+
+    if "shared" in p:
+        sh = p["shared"]
+        g2 = jnp.einsum("bsd,df->bsf", h, sh["w_gate"])
+        u2 = jnp.einsum("bsd,df->bsf", h, sh["w_up"])
+        y = y + jnp.einsum("bsf,fd->bsd", silu(g2) * u2, sh["w_down"])
+
+    # Load-balance aux (Switch): E * sum_e f_e * p_e.
+    frac = expert_mask.mean(axis=(0, 1))                             # fraction routed
+    prob = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac * prob)
+    return x + constrain(y, "batch", "seq", "embed"), aux

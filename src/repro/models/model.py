@@ -1,0 +1,200 @@
+"""Top-level model: embed -> stages -> norm -> head, plus step builders.
+
+Public surface used by the launcher, dry-run, tests and benchmarks:
+
+  specs(cfg)                      parameter Spec tree
+  init(cfg, key)                  materialized params
+  loss_fn(params, cfg, batch)     train NLL (+ MoE aux)
+  prefill_fn / decode_fn          serving steps with KV/SSM caches
+  make_cache_specs(cfg, shape)    cache Spec tree for AOT lowering
+  input_specs(cfg, shape)         ShapeDtypeStruct batch stand-ins
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.common import (
+    Spec, cross_entropy, init_params, logical_axes, param_count,
+    rms_norm, shape_structs, sinusoidal_pos_embed, zeros_params,
+)
+from repro.parallel.sharding import constrain
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# specs
+
+def specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    s: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        s["embed"] = Spec((cfg.n_codebooks, v, d), ("codebooks", "vocab", "embed_param"))
+        s["lm_head"] = Spec((d, cfg.n_codebooks, v), ("embed_param", "codebooks", "vocab"))
+    else:
+        s["embed"] = Spec((v, d), ("vocab", "embed_param"))
+        if not cfg.tie_embeddings:
+            s["lm_head"] = Spec((d, v), ("embed_param", "vocab"))
+    if cfg.family == "vlm":
+        s["vision_proj"] = Spec((cfg.d_vision, d), ("vision_embed", "embed_param"))
+    s["stages"] = tf.stack_stage_specs(cfg)
+    s["final_ln"] = Spec((d,), ("norm",), "ones")
+    return s
+
+
+def init(cfg: ModelConfig, key: jax.Array):
+    return init_params(specs(cfg), key, dtype_of(cfg))
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return param_count(specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+def _embed(params, cfg: ModelConfig, tokens: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.family == "audio":
+        # tokens: (B, S, K); sum the K codebook embeddings (MusicGen).
+        x = jnp.take(params["embed"][0], tokens[..., 0], axis=0)
+        for kb in range(1, cfg.n_codebooks):
+            x = x + jnp.take(params["embed"][kb], tokens[..., kb], axis=0)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + sinusoidal_pos_embed(positions, cfg.d_model).astype(x.dtype)
+    return constrain(x, "batch", "seq", "embed")
+
+
+def _head(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_ln"])
+    if cfg.family == "audio":
+        logits = jnp.einsum("bsd,dkv->bskv", x, params["lm_head"])
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return constrain(logits, *(("batch", "seq", None, "act_vocab")
+                               if cfg.family == "audio"
+                               else ("batch", "seq", "act_vocab")))
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    mode: str,
+    positions: Optional[jax.Array] = None,
+    cache_pos=None,
+    caches=None,
+    vision_embeds: Optional[jax.Array] = None,
+    remat: str = "block",
+):
+    """Returns (logits, new_caches, aux)."""
+    b = tokens.shape[0]
+    s = tokens.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = _embed(params, cfg, tokens, positions)
+    vision_proj = None
+    if cfg.family == "vlm" and vision_embeds is not None:
+        vision_proj = jnp.einsum("bnd,de->bne", vision_embeds, params["vision_proj"])
+        vision_proj = constrain(vision_proj, "batch", "vision_seq", "embed")
+    x, new_caches, aux = tf.apply_stages(
+        x, params["stages"], cfg,
+        mode=mode, positions=positions, cache_pos=cache_pos,
+        caches=caches, vision_proj=vision_proj, remat=remat,
+    )
+    logits = _head(params, cfg, x)
+    return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# step functions
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            remat: str = "block") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _, aux = forward(
+        params, cfg, batch["inputs"], mode="train",
+        vision_embeds=batch.get("vision_embeds"), remat=remat)
+    nll = cross_entropy(logits, batch["targets"])
+    loss = nll + cfg.router_aux_weight * aux
+    return loss, {"nll": nll, "router_aux": aux}
+
+
+def prefill_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array], caches):
+    """Process a full prompt, fill caches; returns (last-token logits, caches)."""
+    logits, new_caches, _ = forward(
+        params, cfg, batch["inputs"], mode="prefill",
+        caches=caches, vision_embeds=batch.get("vision_embeds"), remat="none")
+    return logits[:, -1], new_caches
+
+
+def decode_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array], caches):
+    """One decode step: new token at position ``pos`` against full caches."""
+    pos = batch["pos"]  # scalar int32
+    b = batch["token"].shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    logits, new_caches, _ = forward(
+        params, cfg, batch["token"], mode="decode",
+        positions=positions, cache_pos=pos, caches=caches, remat="none")
+    return logits[:, -1], new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache + input specs
+
+def make_cache_specs(cfg: ModelConfig, batch: int, s_max: int):
+    return tf.cache_specs(cfg, batch, s_max)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    return zeros_params(make_cache_specs(cfg, batch, s_max), dtype_of(cfg))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Spec]:
+    """Input Spec tree for one (arch, shape) cell (dry-run stand-ins)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_axes = ("batch", "seq")
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            io = {
+                "inputs": Spec((b, s, cfg.n_codebooks), tok_axes + (None,), dtype="int32"),
+                "targets": Spec((b, s, cfg.n_codebooks), tok_axes + (None,), dtype="int32"),
+            }
+        else:
+            io = {
+                "inputs": Spec((b, s), tok_axes, dtype="int32"),
+                "targets": Spec((b, s), tok_axes, dtype="int32"),
+            }
+        if cfg.family == "vlm":
+            io["vision_embeds"] = Spec(
+                (b, cfg.n_vision_tokens, cfg.d_vision),
+                ("batch", "vision_seq", "vision_embed"), dtype=cfg.dtype)
+        return io
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            io = {"inputs": Spec((b, s, cfg.n_codebooks), tok_axes + (None,), dtype="int32")}
+        else:
+            io = {"inputs": Spec((b, s), tok_axes, dtype="int32")}
+        if cfg.family == "vlm":
+            io["vision_embeds"] = Spec(
+                (b, cfg.n_vision_tokens, cfg.d_vision),
+                ("batch", "vision_seq", "vision_embed"), dtype=cfg.dtype)
+        return io
+    if shape.kind == "decode":
+        tok_shape = (b, 1, cfg.n_codebooks) if cfg.family == "audio" else (b, 1)
+        tok_ax = ("batch", "seq", None) if cfg.family == "audio" else ("batch", "seq")
+        return {
+            "token": Spec(tok_shape, tok_ax, dtype="int32"),
+            "pos": Spec((), (), dtype="int32"),
+        }
+    raise ValueError(shape.kind)

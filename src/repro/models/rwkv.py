@@ -1,0 +1,203 @@
+"""RWKV6 ("Finch") block: data-dependent-decay linear attention.
+
+The WKV recurrence ``S_t = diag(w_t) S_{t-1} + k_t^T v_t`` is an
+input-conditioned leaky integrator -- the closest LM-scale analogue of the
+paper's LIF membrane dynamics (the learned, data-dependent decay ``w_t``
+plays the role of the leak lambda; DESIGN.md §5). It shares the nested
+chunked-scan substrate with :mod:`repro.models.ssm`.
+
+Follows arXiv:2404.05892: token-shift with LoRA data-dependent mixing for
+(r, k, v, w, g), LoRA decay, per-head bonus ``u``, group-norm over heads.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Spec, rms_norm, silu
+from repro.parallel.sharding import constrain
+
+WKV_CHUNK = 256
+N_MIX = 5  # r, k, v, w, g
+
+
+def rwkv_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv_att_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    d = cfg.d_model
+    h, dk = rwkv_heads(cfg), cfg.rwkv_head_dim
+    mix, dec = cfg.rwkv_lora_mix, cfg.rwkv_lora_decay
+    return {
+        "ln": Spec((d,), ("norm",), "ones"),
+        "mu_x": Spec((d,), ("norm",), "small"),
+        "mu_base": Spec((N_MIX, d), (None, "norm"), "small"),
+        "w1": Spec((d, N_MIX * mix), ("mlp_in", "rwkv_lora"), "small"),
+        "w2": Spec((N_MIX, mix, d), (None, "rwkv_lora", "norm"), "small"),
+        "w0_decay": Spec((d,), ("norm",), "zeros"),
+        "wd1": Spec((d, dec), ("mlp_in", "rwkv_lora"), "small"),
+        "wd2": Spec((dec, d), ("rwkv_lora", "norm"), "small"),
+        "u": Spec((h, dk), ("rwkv_heads", "rwkv_key"), "small"),
+        "wr": Spec((d, d), ("mlp_in", "d_inner")),
+        "wk": Spec((d, d), ("mlp_in", "d_inner")),
+        "wv": Spec((d, d), ("mlp_in", "d_inner")),
+        "wg": Spec((d, d), ("mlp_in", "d_inner")),
+        "gn_gamma": Spec((d,), ("norm",), "ones"),
+        "gn_beta": Spec((d,), ("norm",), "zeros"),
+        "wo": Spec((d, d), ("d_inner", "mlp_in")),
+    }
+
+
+def rwkv_ffn_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln": Spec((d,), ("norm",), "ones"),
+        "mu_k": Spec((d,), ("norm",), "small"),
+        "mu_r": Spec((d,), ("norm",), "small"),
+        "wk": Spec((d, f), ("mlp_in", "mlp")),
+        "wv": Spec((f, d), ("mlp", "mlp_in")),
+        "wr": Spec((d, d), ("mlp_in", "mlp_in")),
+    }
+
+
+class RWKVState(NamedTuple):
+    att_x: jax.Array  # (B, D) last token fed to time-mix
+    ffn_x: jax.Array  # (B, D) last token fed to channel-mix
+    wkv: jax.Array    # (B, H, dk, dv) f32 state
+
+
+def init_rwkv_state(batch: int, cfg: ModelConfig, dtype) -> RWKVState:
+    h, dk = rwkv_heads(cfg), cfg.rwkv_head_dim
+    return RWKVState(
+        att_x=jnp.zeros((batch, cfg.d_model), dtype),
+        ffn_x=jnp.zeros((batch, cfg.d_model), dtype),
+        wkv=jnp.zeros((batch, h, dk, dk), jnp.float32),
+    )
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: x_{t-1} (zeros / carried state at t=0). x: (B,S,D)."""
+    first = prev[:, None, :] if prev is not None else jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(s0, r, k, v, w, u) -> Tuple[jax.Array, jax.Array]:
+    """Time-major WKV recurrence; returns (ys (S,B,H,dv), s_T).
+
+    r,k,v,w: (S, B, H, dk) f32 (w already exp(-exp(.)) in (0,1)).
+    """
+    s_len = r.shape[0]
+    chunk = min(WKV_CHUNK, s_len)
+    assert s_len % chunk == 0
+    n_chunks = s_len // chunk
+    rs = lambda t: t.reshape((n_chunks, chunk) + t.shape[1:])
+
+    def step(s, args):
+        r_t, k_t, v_t, w_t = args
+        kv = k_t[..., None] * v_t[..., None, :]            # (B,H,dk,dv)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, s + u * kv)   # u: (1,H,dk,1)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    @jax.checkpoint
+    def chunk_body(s, args):
+        return jax.lax.scan(step, s, args)
+
+    sT, ys = jax.lax.scan(chunk_body, s0, (rs(r), rs(k), rs(v), rs(w)))
+    return ys.reshape((s_len,) + ys.shape[2:]), sT
+
+
+def _group_norm(y: jax.Array, gamma: jax.Array, beta: jax.Array, n_heads: int,
+                eps: float = 1e-5) -> jax.Array:
+    """Per-head normalization over the head dim. y: (B, S, D)."""
+    b, s, d = y.shape
+    yh = y.reshape(b, s, n_heads, d // n_heads).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    out = yh.reshape(b, s, d) * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out
+
+
+def rwkv_time_mix(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    state: Optional[RWKVState] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array], Optional[jax.Array]]:
+    """Returns (x + out, new_att_x, new_wkv)."""
+    b, s, d = x.shape
+    h_n, dk = rwkv_heads(cfg), cfg.rwkv_head_dim
+    xn = rms_norm(x, p["ln"])
+    xn = constrain(xn, "batch", "seq", "embed")
+
+    xx = _shift(xn, state.att_x if state is not None else None)
+    dx = xx - xn
+    # Data-dependent mixing (ddlerp): 5 interpolation targets via LoRA.
+    lora = jnp.tanh(jnp.einsum("bsd,dm->bsm", xn + dx * p["mu_x"], p["w1"]))
+    lora = lora.reshape(b, s, N_MIX, -1)
+    deltas = jnp.einsum("bsfm,fmd->bsfd", lora, p["w2"])
+    m = xn[:, :, None, :] + dx[:, :, None, :] * (p["mu_base"] + deltas)
+    m_r, m_k, m_v, m_w, m_g = [m[:, :, i, :] for i in range(N_MIX)]
+
+    r = jnp.einsum("bsd,de->bse", m_r, p["wr"])
+    k = jnp.einsum("bsd,de->bse", m_k, p["wk"])
+    v = jnp.einsum("bsd,de->bse", m_v, p["wv"])
+    g = silu(jnp.einsum("bsd,de->bse", m_g, p["wg"]))
+    # Data-dependent decay (the learned leak): w in (0,1).
+    w_raw = p["w0_decay"] + jnp.einsum(
+        "bsm,md->bsd", jnp.tanh(jnp.einsum("bsd,dm->bsm", m_w, p["wd1"])), p["wd2"])
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32)))
+
+    hd = lambda t: t.reshape(b, s, h_n, dk)
+    rf, kf, vf, wf = (hd(r).astype(jnp.float32), hd(k).astype(jnp.float32),
+                      hd(v).astype(jnp.float32), hd(w))
+    u = p["u"].astype(jnp.float32)                         # (H, dk)
+
+    s0 = state.wkv if state is not None else jnp.zeros((b, h_n, dk, dk), jnp.float32)
+    if s == 1:
+        kv = kf[:, 0, :, :, None] * vf[:, 0, :, None, :]
+        y = jnp.einsum("bhi,bhij->bhj", rf[:, 0], s0 + u[None, :, :, None] * kv)
+        sT = wf[:, 0, ..., None] * s0 + kv
+        ys = y[:, None]                                    # (B,1,H,dv)
+    else:
+        tm = lambda t: t.transpose(1, 0, 2, 3)
+        ys_t, sT = _wkv_scan(s0, tm(rf), tm(kf), tm(vf), tm(wf), u[None, :, :, None])
+        ys = ys_t.transpose(1, 0, 2, 3)
+
+    y = ys.reshape(b, s, d)
+    y = _group_norm(y, p["gn_gamma"], p["gn_beta"], h_n)
+    y = (y * g.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y, p["wo"])
+    out = constrain(out, "batch", "seq", "embed")
+
+    new_att_x = xn[:, -1] if return_state else None
+    new_wkv = sT if return_state else None
+    return x + out, new_att_x, new_wkv
+
+
+def rwkv_channel_mix(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    state_x: Optional[jax.Array] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    xn = rms_norm(x, p["ln"])
+    xx = _shift(xn, state_x)
+    dx = xx - xn
+    k_in = xn + dx * p["mu_k"]
+    r_in = xn + dx * p["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", k_in, p["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", r_in, p["wr"])) * kv
+    new_x = xn[:, -1] if return_state else None
+    return x + out, new_x

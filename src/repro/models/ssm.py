@@ -1,0 +1,166 @@
+"""Mamba-1 block (Jamba's SSM layer): selective scan with chunked rollout.
+
+The selective state update ``h' = exp(dt*A) h + dt*B*x`` is the same
+shape of computation as the paper's LIF membrane update (input-conditioned
+decay + drive; DESIGN.md §5) and shares the discrete-time scan substrate.
+
+Memory strategy: the scan over time nests (outer chunks x inner steps) with
+the inner chunk body checkpointed, so a layer's forward keeps only
+chunk-boundary states; under block-level remat even those are recomputed in
+backward. Decode carries (conv_state, h) explicitly.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Spec, rms_norm, silu
+from repro.parallel.sharding import constrain
+
+SSM_CHUNK = 256
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv
+    r = dt_rank(cfg)
+    return {
+        "ln": Spec((d,), ("norm",), "ones"),
+        "in_proj_x": Spec((d, di), ("mlp_in", "d_inner")),
+        "in_proj_z": Spec((d, di), ("mlp_in", "d_inner")),
+        "conv_w": Spec((k, di), ("d_conv", "d_inner")),
+        "conv_b": Spec((di,), ("d_inner",), "zeros"),
+        "x_proj_dt": Spec((di, r), ("d_inner", None)),
+        "x_proj_b": Spec((di, n), ("d_inner", "d_state")),
+        "x_proj_c": Spec((di, n), ("d_inner", "d_state")),
+        "dt_proj": Spec((r, di), (None, "d_inner")),
+        "dt_bias": Spec((di,), ("d_inner",), "zeros"),
+        "a_log": Spec((di, n), ("d_inner", "d_state"), "ones"),
+        "d_skip": Spec((di,), ("d_inner",), "ones"),
+        "out_proj": Spec((di, d), ("d_inner", "mlp_in")),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, d_inner) trailing inputs
+    h: jax.Array     # (B, d_inner, d_state) f32
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig, dtype) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        h=jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prepend: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv1d. x: (B, S, di); w: (k, di)."""
+    k = w.shape[0]
+    pad = prepend if prepend is not None else jnp.zeros(
+        (x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+k-1, di)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _selective_scan(
+    h0: jax.Array, dt: jax.Array, bmat: jax.Array, cmat: jax.Array,
+    xc: jax.Array, a: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused selective scan; never materializes (B, S, di, n).
+
+    Per step: ``h = exp(dt*A) h + (dt*x) B_t``; ``y = <h, C_t>``.
+    Args (time-major f32): dt, xc: (S, B, di); bmat, cmat: (S, B, n);
+    a: (di, n); h0: (B, di, n). Returns (ys (S, B, di) f32, h_T).
+    Nested chunked scan: the checkpointed inner chunk keeps only
+    chunk-boundary carries live in the forward.
+    """
+    s = dt.shape[0]
+    chunk = min(SSM_CHUNK, s)
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+    n_chunks = s // chunk
+    rs = lambda t: t.reshape((n_chunks, chunk) + t.shape[1:])
+
+    def step(h, args):
+        dt_t, b_t, c_t, x_t = args
+        decay = jnp.exp(dt_t[..., None] * a)
+        h = decay * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("ben,bn->be", h, c_t)
+        return h, y
+
+    @jax.checkpoint
+    def chunk_body(h, args):
+        return jax.lax.scan(step, h, args)
+
+    hT, ys = jax.lax.scan(chunk_body, h0, (rs(dt), rs(bmat), rs(cmat), rs(xc)))
+    return ys.reshape((s,) + ys.shape[2:]), hT
+
+
+def mamba_block(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    state: Optional[MambaState] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[MambaState]]:
+    """Pre-norm residual Mamba sublayer.
+
+    Train/prefill: state None (zeros) unless resuming; full-sequence scan.
+    Decode: x is (B, 1, D) and ``state`` carries (conv, h).
+    """
+    bsz, s, d = x.shape
+    h_in = rms_norm(x, p["ln"])
+    h_in = constrain(h_in, "batch", "seq", "embed")
+    xi = jnp.einsum("bsd,de->bse", h_in, p["in_proj_x"])
+    z = jnp.einsum("bsd,de->bse", h_in, p["in_proj_z"])
+    xi = constrain(xi, "batch", None, "d_inner")
+
+    prepend = state.conv if state is not None else None
+    xc = silu(_causal_conv(xi, p["conv_w"], p["conv_b"], prepend))
+
+    dt = jnp.einsum("bse,er->bsr", xc, p["x_proj_dt"])
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt, p["dt_proj"]) + p["dt_bias"])
+    bmat = jnp.einsum("bse,en->bsn", xc, p["x_proj_b"]).astype(jnp.float32)
+    cmat = jnp.einsum("bse,en->bsn", xc, p["x_proj_c"]).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                     # (di, n)
+
+    dtf = dt.astype(jnp.float32)
+    xcf = xc.astype(jnp.float32)
+
+    h0 = state.h if state is not None else jnp.zeros(
+        (bsz, cfg.d_inner, cfg.d_state), jnp.float32)
+
+    if s == 1:
+        decay0 = jnp.exp(dtf[:, 0, :, None] * a)
+        hT = decay0 * h0 + (dtf[:, 0] * xcf[:, 0])[..., None] * bmat[:, 0, None, :]
+        y = jnp.einsum("ben,bn->be", hT, cmat[:, 0])[:, None]        # (B,1,di)
+    else:
+        ys, hT = _selective_scan(
+            h0, dtf.transpose(1, 0, 2), bmat.transpose(1, 0, 2),
+            cmat.transpose(1, 0, 2), xcf.transpose(1, 0, 2), a)
+        y = ys.transpose(1, 0, 2)                                    # (B,S,di)
+    y = y.astype(x.dtype) + p["d_skip"] * xc
+    y = y * silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    out = constrain(out, "batch", "seq", "embed")
+
+    new_state = None
+    if return_state:
+        conv_tail_src = jnp.concatenate(
+            [state.conv, xi], axis=1) if state is not None else xi
+        pad = cfg.d_conv - 1
+        if conv_tail_src.shape[1] < pad:
+            conv_tail_src = jnp.concatenate(
+                [jnp.zeros((bsz, pad - conv_tail_src.shape[1], cfg.d_inner), xi.dtype),
+                 conv_tail_src], axis=1)
+        new_state = MambaState(conv=conv_tail_src[:, -pad:], h=hT)
+    return x + out, new_state

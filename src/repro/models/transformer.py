@@ -1,0 +1,315 @@
+"""Generic decoder stack: every assigned architecture is a *stage plan*.
+
+A model is a list of stages; each stage scans over ``n_groups`` identical
+groups; a group applies a fixed pattern of layers (mixer + FFN kind). This
+single machine expresses:
+
+  dense/audio     1 stage, group = [attn + dense]
+  llama4 (MoE)    1 stage, group = [attn + moe(+shared)]
+  moonshot        2 stages: [attn + dense] x1, then [attn + moe] x47
+  jamba           1 stage of 9 groups x 8 layers (attn at idx 4, mamba
+                  elsewhere; MoE at odd indices)
+  vlm             1 stage of 20 groups x 5 layers (cross-attn at idx 0)
+  rwkv6           1 stage, group = [time-mix + channel-mix]
+
+Scanning over groups keeps the HLO O(group) instead of O(L) -- fast AOT
+compiles on the 512-device dry-run mesh -- while the roofline parser
+multiplies while-body costs by trip counts (launch/hlo_cost.py).
+
+KV caches / SSM states thread through the scan as per-group xs/ys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import Spec, stack_specs
+from repro.parallel.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    mixer: str   # attn | cross | mamba | rwkv
+    ffn: str     # dense | moe | rwkv | none
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    n_groups: int
+    layers: Tuple[LayerPlan, ...]
+
+
+def stage_plans(cfg: ModelConfig) -> List[StagePlan]:
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        return [StagePlan(cfg.n_layers, (LayerPlan("attn", "dense"),))]
+    if fam == "moe":
+        stages = []
+        if cfg.first_dense_layers:
+            stages.append(StagePlan(cfg.first_dense_layers, (LayerPlan("attn", "dense"),)))
+        rest = cfg.n_layers - cfg.first_dense_layers
+        kind = "moe"
+        stages.append(StagePlan(rest, (LayerPlan("attn", kind),)))
+        return stages
+    if fam == "hybrid":
+        g = cfg.group_size
+        assert cfg.n_layers % g == 0
+        layers = tuple(
+            LayerPlan(
+                "attn" if i == cfg.attn_index else "mamba",
+                "moe" if cfg.is_moe_layer(i) else "dense",
+            )
+            for i in range(g)
+        )
+        return [StagePlan(cfg.n_layers // g, layers)]
+    if fam == "vlm":
+        g = cfg.group_size
+        assert cfg.n_layers % g == 0
+        layers = tuple(
+            LayerPlan("cross" if i == cfg.cross_index else "attn", "dense")
+            for i in range(g)
+        )
+        return [StagePlan(cfg.n_layers // g, layers)]
+    if fam == "rwkv":
+        return [StagePlan(cfg.n_layers, (LayerPlan("rwkv", "rwkv"),))]
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# ---------------------------------------------------------------------------
+# specs
+
+
+def _layer_specs(cfg: ModelConfig, plan: LayerPlan) -> Dict[str, Any]:
+    s: Dict[str, Any] = {}
+    if plan.mixer == "attn":
+        s["mixer"] = attn.attn_specs(cfg)
+    elif plan.mixer == "cross":
+        s["mixer"] = attn.attn_specs(cfg, cross=True)
+    elif plan.mixer == "mamba":
+        s["mixer"] = ssm_mod.mamba_specs(cfg)
+    elif plan.mixer == "rwkv":
+        s["mixer"] = rwkv_mod.rwkv_att_specs(cfg)
+    else:
+        raise ValueError(plan.mixer)
+    if plan.ffn == "dense":
+        s["ffn"] = ffn_mod.dense_ffn_specs(cfg, cfg.d_ff_dense or None)
+    elif plan.ffn == "moe":
+        s["ffn"] = ffn_mod.moe_ffn_specs(cfg)
+    elif plan.ffn == "rwkv":
+        s["ffn"] = rwkv_mod.rwkv_ffn_specs(cfg)
+    elif plan.ffn != "none":
+        raise ValueError(plan.ffn)
+    return s
+
+
+def stack_stage_specs(cfg: ModelConfig) -> List[Dict[str, Any]]:
+    out = []
+    for stage in stage_plans(cfg):
+        layer_specs = {
+            f"layer{i}": _layer_specs(cfg, lp) for i, lp in enumerate(stage.layers)
+        }
+        out.append(stack_specs(layer_specs, stage.n_groups, "groups"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# caches
+
+def _layer_cache_specs(
+    cfg: ModelConfig, plan: LayerPlan, batch: int, s_max: int
+) -> Optional[Dict[str, Any]]:
+    dh, hkv = cfg.d_head, cfg.n_kv_heads
+    if plan.mixer in ("attn",):
+        # Flat KV, sharded along kv_seq (flash-decoding style) -- never on
+        # the head dim (every assigned arch has kv_heads < TP width).
+        kv = {
+            "k": Spec((batch, s_max, hkv * dh), ("batch", "kv_seq", None), "zeros"),
+            "v": Spec((batch, s_max, hkv * dh), ("batch", "kv_seq", None), "zeros"),
+        }
+        return {"kv": kv}
+    if plan.mixer == "cross":
+        nv = cfg.n_vision_tokens
+        kv = {
+            "k": Spec((batch, nv, hkv * dh), ("batch", "vision_seq", None), "zeros"),
+            "v": Spec((batch, nv, hkv * dh), ("batch", "vision_seq", None), "zeros"),
+        }
+        return {"kv": kv}
+    if plan.mixer == "mamba":
+        return {
+            "conv": Spec((batch, cfg.d_conv - 1, cfg.d_inner), ("batch", None, "d_inner"), "zeros"),
+            "h": Spec((batch, cfg.d_inner, cfg.d_state), ("batch", "d_inner", "d_state"), "zeros",
+                      dtype="float32"),
+        }
+    if plan.mixer == "rwkv":
+        h_n, dk = rwkv_mod.rwkv_heads(cfg), cfg.rwkv_head_dim
+        return {
+            "att_x": Spec((batch, cfg.d_model), ("batch", "embed"), "zeros"),
+            "ffn_x": Spec((batch, cfg.d_model), ("batch", "embed"), "zeros"),
+            "wkv": Spec((batch, h_n, dk, dk), ("batch", "rwkv_heads", "rwkv_key", None),
+                        "zeros", dtype="float32"),
+        }
+    return None
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int) -> List[Dict[str, Any]]:
+    """Spec tree for the decode cache, one entry per stage (stacked)."""
+    out = []
+    for stage in stage_plans(cfg):
+        layer_caches = {}
+        for i, lp in enumerate(stage.layers):
+            c = _layer_cache_specs(cfg, lp, batch, s_max)
+            if c is not None:
+                layer_caches[f"layer{i}"] = c
+        out.append(stack_specs(layer_caches, stage.n_groups, "groups"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# apply
+
+
+def _apply_layer(
+    x: jax.Array,
+    p: Dict[str, Any],
+    cfg: ModelConfig,
+    plan: LayerPlan,
+    *,
+    mode: str,
+    positions: jax.Array,
+    cache_pos,
+    cache: Optional[Dict[str, Any]],
+    vision_proj: Optional[jax.Array],
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """Returns (x, new_cache_leaf_dict, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[Dict[str, Any]] = None
+
+    if plan.mixer == "attn":
+        if mode == "train":
+            x, _ = attn.self_attention(x, p["mixer"], cfg, positions=positions)
+        elif mode == "prefill":
+            x, kv = attn.self_attention(
+                x, p["mixer"], cfg, positions=positions, cache_pos="prefill")
+            # Write fresh K/V into the fixed-size cache buffer.
+            k_buf = jax.lax.dynamic_update_slice_in_dim(
+                cache["kv"]["k"], kv.k.astype(cache["kv"]["k"].dtype), 0, axis=1)
+            v_buf = jax.lax.dynamic_update_slice_in_dim(
+                cache["kv"]["v"], kv.v.astype(cache["kv"]["v"].dtype), 0, axis=1)
+            new_cache = {"kv": {"k": k_buf, "v": v_buf}}
+        else:  # decode
+            kvc = attn.KVCache(k=cache["kv"]["k"], v=cache["kv"]["v"])
+            x, kv = attn.self_attention(
+                x, p["mixer"], cfg, positions=positions, cache=kvc, cache_pos=cache_pos)
+            new_cache = {"kv": {"k": kv.k, "v": kv.v}}
+    elif plan.mixer == "cross":
+        if mode == "train":
+            kv = attn.project_vision_kv(vision_proj, p["mixer"], cfg)
+            x = attn.cross_attention(x, p["mixer"], cfg, kv_cache=kv)
+        elif mode == "prefill":
+            kv = attn.project_vision_kv(vision_proj, p["mixer"], cfg)
+            x = attn.cross_attention(x, p["mixer"], cfg, kv_cache=kv)
+            new_cache = {"kv": {"k": kv.k.astype(cache["kv"]["k"].dtype),
+                                "v": kv.v.astype(cache["kv"]["v"].dtype)}}
+        else:
+            kv = attn.KVCache(k=cache["kv"]["k"], v=cache["kv"]["v"])
+            x = attn.cross_attention(x, p["mixer"], cfg, kv_cache=kv)
+            new_cache = {"kv": {"k": kv.k, "v": kv.v}}
+    elif plan.mixer == "mamba":
+        if mode == "train":
+            x, _ = ssm_mod.mamba_block(x, p["mixer"], cfg)
+        else:
+            st = None
+            if mode == "decode":
+                st = ssm_mod.MambaState(conv=cache["conv"], h=cache["h"])
+            x, new_st = ssm_mod.mamba_block(
+                x, p["mixer"], cfg, state=st, return_state=True)
+            new_cache = {"conv": new_st.conv, "h": new_st.h}
+    elif plan.mixer == "rwkv":
+        st = None
+        if mode == "decode":
+            st = rwkv_mod.RWKVState(
+                att_x=cache["att_x"], ffn_x=cache["ffn_x"], wkv=cache["wkv"])
+        want_state = mode != "train"
+        x, new_att_x, new_wkv = rwkv_mod.rwkv_time_mix(
+            x, p["mixer"], cfg, state=st, return_state=want_state)
+        x, new_ffn_x = rwkv_mod.rwkv_channel_mix(
+            x, p["ffn"], cfg,
+            state_x=st.ffn_x if st is not None else None, return_state=want_state)
+        if want_state:
+            new_cache = {"att_x": new_att_x, "ffn_x": new_ffn_x, "wkv": new_wkv}
+        return x, new_cache, aux
+
+    # FFN (rwkv handled above)
+    if plan.ffn == "dense":
+        x = ffn_mod.dense_ffn(x, p["ffn"])
+    elif plan.ffn == "moe":
+        # Decode steps get serving capacity headroom (dropless in practice);
+        # train/prefill use the GShard capacity factor.
+        cap = ffn_mod.DECODE_CAPACITY_FACTOR if mode == "decode" else None
+        x, aux = ffn_mod.moe_ffn(x, p["ffn"], cfg, cap_factor=cap)
+    return x, new_cache, aux
+
+
+def apply_stages(
+    x: jax.Array,
+    stage_params: List[Dict[str, Any]],
+    cfg: ModelConfig,
+    *,
+    mode: str,
+    positions: jax.Array,
+    cache_pos=None,
+    caches: Optional[List[Dict[str, Any]]] = None,
+    vision_proj: Optional[jax.Array] = None,
+    remat: str = "block",
+) -> Tuple[jax.Array, Optional[List[Dict[str, Any]]], jax.Array]:
+    """Run all stages; returns (x, new_caches, total_aux)."""
+    plans = stage_plans(cfg)
+    new_caches: List[Any] = []
+    total_aux = jnp.zeros((), jnp.float32)
+
+    for stage, params, cache in zip(
+        plans, stage_params, caches if caches is not None else [None] * len(plans)
+    ):
+        def group_body(carry, xs, _stage=stage):
+            h, aux_acc = carry
+            p_group, cache_group = xs
+            cache_out = {}
+            for i, lp in enumerate(_stage.layers):
+                name = f"layer{i}"
+                c_in = cache_group.get(name) if cache_group is not None else None
+                h, c_new, aux = _apply_layer(
+                    h, p_group[name], cfg, lp,
+                    mode=mode, positions=positions, cache_pos=cache_pos,
+                    cache=c_in, vision_proj=vision_proj,
+                )
+                if c_new is not None:
+                    cache_out[name] = c_new
+            h = constrain(h, "batch", "seq", "embed")
+            return (h, aux_acc + aux), cache_out
+
+        body = group_body
+        if mode == "train" and remat != "none":
+            policy = None
+            if remat == "dots":
+                policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+            body = jax.checkpoint(group_body, policy=policy, prevent_cse=False)
+
+        xs = (params, cache)
+        if cache is None:
+            xs = (params, None)
+            # scan needs a pytree of arrays; use params-only xs then.
+            (x, total_aux), cache_ys = jax.lax.scan(
+                lambda c, p_g: body(c, (p_g, None)), (x, total_aux), params)
+        else:
+            (x, total_aux), cache_ys = jax.lax.scan(body, (x, total_aux), xs)
+        new_caches.append(cache_ys)
+
+    return x, (new_caches if caches is not None else None), total_aux

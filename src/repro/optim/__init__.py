@@ -1,0 +1,3 @@
+from repro.optim import adamw, adafactor, schedule, clip, compression
+
+__all__ = ["adamw", "adafactor", "schedule", "clip", "compression"]

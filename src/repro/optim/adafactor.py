@@ -1,0 +1,86 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moment.
+
+For >=100B parameters the O(N) second moment dominates HBM; Adafactor
+stores row/col factors instead -- O(n+m) per (n, m) matrix. Offered as the
+``optimizer="adafactor"`` choice for the largest archs.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any   # row factors (or full v for <2D leaves)
+    vc: Any   # col factors (zeros-placeholder for <2D leaves)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init(params) -> AdafactorState:
+    def vr_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree.map(vr_init, params),
+        vc=jax.tree.map(vc_init, params),
+    )
+
+
+def update(
+    grads,
+    state: AdafactorState,
+    params,
+    *,
+    lr,
+    decay: float = 0.99,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Tuple[Any, AdafactorState]:
+    step = state.step + 1
+
+    def upd(p, g, vr, vc):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if _factored(p):
+            new_vr = decay * vr + (1 - decay) * g2.mean(axis=-1)
+            new_vc = decay * vc + (1 - decay) * g2.mean(axis=-2)
+            denom_r = new_vr / jnp.maximum(new_vr.mean(axis=-1, keepdims=True), eps)
+            u = gf / (jnp.sqrt(denom_r)[..., None] * jnp.sqrt(new_vc)[..., None, :] + eps)
+        else:
+            new_vr = decay * vr + (1 - decay) * g2
+            new_vc = vc
+            u = gf / (jnp.sqrt(new_vr) + eps)
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        newp = (p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32)))
+        return newp.astype(p.dtype), new_vr, new_vc
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_vr = tdef.flatten_up_to(state.vr)
+    flat_vc = tdef.flatten_up_to(state.vc)
+    out = [upd(*t) for t in zip(flat_p, flat_g, flat_vr, flat_vc)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        AdafactorState(
+            step=step,
+            vr=tdef.unflatten([o[1] for o in out]),
+            vc=tdef.unflatten([o[2] for o in out]),
+        ),
+    )

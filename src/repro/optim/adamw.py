@@ -1,0 +1,66 @@
+"""AdamW from scratch, with dtype-configurable sharded state.
+
+State leaves inherit the parameter's sharding (same tree structure), so
+ZeRO-style partitioning falls out of the parameter sharding rules for
+free. ``state_dtype=bfloat16`` halves optimizer HBM for >=100B archs
+(jamba-398b: 12.4 GB -> 6.2 GB per chip; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params, state_dtype=jnp.float32) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, jnp.dtype(state_dtype))
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(z, params),
+        v=jax.tree.map(z, params),
+    )
+
+
+def update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Any, AdamWState]:
+    """Returns (new_params, new_state). ``lr`` may be a traced scalar."""
+    step = state.step + 1
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** sf
+    bc2 = 1.0 - b2 ** sf
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,49 @@
+"""int8 error-feedback gradient compression (pod-axis all-reduce trick).
+
+At 512+ chips the cross-pod (DCI) gradient all-reduce is the slowest
+collective. Compressing gradients to int8 with per-leaf scales cuts those
+bytes 4x (vs f32 master grads; 2x vs bf16); the quantization error is
+carried in a residual buffer and re-added next step (error feedback,
+Seide et al. 2014 / 1-bit Adam lineage), preserving convergence to first
+order. Applied *around* the optimizer: grads -> compress -> (all-reduce
+happens in the sharded update) -> decompress.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any  # same tree as grads, f32 error carry
+
+
+def init(params) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress(grads, state: CompressionState):
+    """Returns ((q_int8, scales), new_state). q = round(g+r / scale)."""
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    flat, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(state.residual)
+    qs, scales, rs = zip(*[one(g, r) for g, r in zip(flat, flat_r)])
+    return (
+        (tdef.unflatten(list(qs)), tdef.unflatten(list(scales))),
+        CompressionState(residual=tdef.unflatten(list(rs))),
+    )
+
+
+def decompress(q_and_scales) -> Any:
+    q, scales = q_and_scales
+    return jax.tree.map(
+        lambda qq, s: qq.astype(jnp.float32) * s, q, scales)

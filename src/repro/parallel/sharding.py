@@ -1,0 +1,160 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Every parameter and activation in the model code is annotated with
+*logical* axis names ("embed", "mlp", "q_heads", ...). A rules table maps
+logical names to mesh axes; changing the table re-lowers the same model
+under a different distribution -- the primary hillclimb lever in
+EXPERIMENTS.md §Perf, and the reason sharding choices never leak into model
+code.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+# Baseline logical->mesh mapping for a (data, model) mesh; the dry-run
+# swaps "batch" to ("pod","data") on the multi-pod mesh and per-arch/
+# per-shape overrides are applied on top (see configs + launch/dryrun).
+BASE_RULES: Dict[str, MeshAxes] = {
+    # activations
+    "batch": "data",
+    "seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "act_mlp": "model",
+    "act_heads": "model",
+    "act_vocab": "model",
+    # params -- dense
+    "embed_param": None,      # fsdp: "data"
+    "vocab": "model",
+    "mlp": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv_in": None,           # fsdp: "data"
+    "mlp_in": None,           # fsdp: "data"
+    "norm": None,
+    # params -- moe
+    "experts": "model",
+    "expert_in": None,        # fsdp: "data"
+    "expert_mlp": None,
+    # params -- ssm / rwkv
+    "d_inner": "model",
+    "d_state": None,
+    "d_conv": None,
+    "rwkv_heads": "model",
+    "rwkv_key": None,
+    "rwkv_value": None,
+    "rwkv_lora": None,
+    # vlm / audio
+    "vision_seq": None,
+    "vision_embed": None,
+    "codebooks": None,
+    # stacking
+    "layers": None,
+    "groups": None,
+    # snn
+    "neurons_pre": "model",
+    "neurons_post": None,
+    "inputs": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    mapping: Mapping[str, MeshAxes]
+    mesh: Optional[Mesh] = None
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        entries = []
+        used = set()
+        for a in axes:
+            if a is None:
+                entries.append(None)
+                continue
+            if a not in self.mapping:
+                raise KeyError(f"unknown logical axis {a!r}")
+            e = self.mapping[a]
+            # A mesh axis may appear at most once per spec; when rule
+            # overrides collide (e.g. Megatron-SP seq="model" meeting an
+            # interior heads="model" constraint), earlier dims win.
+            flat = (e,) if isinstance(e, str) else tuple(e or ())
+            if any(f in used for f in flat):
+                entries.append(None)
+                continue
+            used.update(flat)
+            entries.append(e)
+        return P(*entries)
+
+    def sharding(self, axes: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes))
+
+    def with_overrides(self, overrides: Mapping[str, MeshAxes]) -> "AxisRules":
+        m = dict(self.mapping)
+        m.update(overrides)
+        return AxisRules(mapping=m, mesh=self.mesh)
+
+    def with_mesh(self, mesh: Optional[Mesh]) -> "AxisRules":
+        return AxisRules(mapping=self.mapping, mesh=mesh)
+
+
+_ctx = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = current_rules()
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint if rules are active; else identity.
+
+    CPU unit tests run with no rules -> zero overhead, no mesh needed.
+    """
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"rank mismatch: {len(axes)} axes for shape {x.shape}")
+    return jax.lax.with_sharding_constraint(x, rules.sharding(axes))
+
+
+def fsdp_overrides() -> Dict[str, MeshAxes]:
+    """ZeRO-3-style parameter sharding for >=15B archs: the non-"model"
+    major axis of every large matrix also shards over "data"; GSPMD
+    inserts the per-block all-gathers."""
+    return {
+        "embed_param": "data",
+        "qkv_in": "data",
+        "mlp_in": "data",
+        "expert_in": "data",
+    }
+
+
+def multipod_overrides() -> Dict[str, MeshAxes]:
+    """Batch additionally shards over the pod axis (pure-DP across pods)."""
+    return {"batch": ("pod", "data")}
+
+
+def seq_shard_overrides(data_axes: MeshAxes = "data") -> Dict[str, MeshAxes]:
+    """long_500k (global_batch=1): shard sequence instead of batch."""
+    return {"batch": None, "seq": data_axes, "kv_seq": data_axes}

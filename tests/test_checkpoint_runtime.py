@@ -1,0 +1,155 @@
+"""Checkpointing (atomic, rotated, async) + fault-tolerance runtime."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.runtime import elastic, fault_tolerance as ft, straggler
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tree(x=1.0):
+    return {"a": jnp.full((4, 4), x), "nested": {"b": jnp.arange(6).reshape(2, 3)}}
+
+
+class TestCheckpointer:
+    def test_save_restore_roundtrip(self, tmp_path):
+        d = str(tmp_path)
+        t = _tree(3.0)
+        ckpt.save(d, 7, t, extra_meta={"pipeline": {"step": 7}})
+        restored, meta = ckpt.restore(d, t)
+        np.testing.assert_allclose(np.asarray(restored["a"]), np.asarray(t["a"]))
+        np.testing.assert_array_equal(np.asarray(restored["nested"]["b"]),
+                                      np.asarray(t["nested"]["b"]))
+        assert meta["step"] == 7
+        assert meta["extra"]["pipeline"]["step"] == 7
+
+    def test_rotation_keeps_last_k(self, tmp_path):
+        d = str(tmp_path)
+        for s in range(6):
+            ckpt.save(d, s, _tree(s), keep=3)
+        assert ckpt.all_steps(d) == [3, 4, 5]
+
+    def test_latest_picks_newest_complete(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 1, _tree())
+        ckpt.save(d, 5, _tree())
+        # simulate a crashed partial write
+        os.makedirs(os.path.join(d, "step_00000009.tmp"))
+        assert ckpt.latest_step(d) == 5
+
+    def test_async_checkpointer(self, tmp_path):
+        d = str(tmp_path)
+        ac = ckpt.AsyncCheckpointer(d, keep=2)
+        for s in (1, 2, 3):
+            ac.save_async(s, _tree(s))
+        ac.wait()
+        assert ckpt.all_steps(d) == [2, 3]
+
+    def test_restore_missing_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            ckpt.restore(str(tmp_path), _tree())
+
+
+class TestResilientLoop:
+    def test_recovers_from_injected_failures(self, tmp_path):
+        """Steps fail twice; the loop restores and the final state is exactly
+        what an uninterrupted run would produce (counter-based pipeline)."""
+        d = str(tmp_path)
+        failures = {3: 2}  # step -> remaining failures to inject
+
+        def step_fn(step, state):
+            if failures.get(step, 0) > 0:
+                failures[step] -= 1
+                raise RuntimeError("injected preemption")
+            return state + step
+
+        def save_fn(step, state):
+            ckpt.save(d, step, {"s": jnp.asarray(state)})
+
+        def restore_fn():
+            restored, meta = ckpt.restore(d, {"s": jnp.asarray(0)})
+            return meta["step"], int(restored["s"])
+
+        save_fn(0, 0)
+        final_step, final_state = ft.run_resilient_loop(
+            n_steps=6, start_step=0, step_fn=step_fn, state=0,
+            save_fn=save_fn, restore_fn=restore_fn, checkpoint_every=2,
+            policy=ft.RetryPolicy(max_failures=5))
+        assert final_step == 6
+        assert final_state == sum(range(6))
+
+    def test_exhausted_retries_raise(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save(d, 0, {"s": jnp.asarray(0)})
+
+        def bad_step(step, state):
+            raise RuntimeError("permanent failure")
+
+        with pytest.raises(ft.StepFailure):
+            ft.run_resilient_loop(
+                n_steps=3, start_step=0, step_fn=bad_step, state=0,
+                save_fn=lambda s, st: None,
+                restore_fn=lambda: (0, 0), checkpoint_every=10,
+                policy=ft.RetryPolicy(max_failures=2))
+
+    def test_heartbeat_ages(self):
+        hb = ft.Heartbeat()
+        hb.beat()
+        assert hb.age() < 1.0
+
+
+class TestStraggler:
+    def test_flags_slow_host(self):
+        mon = straggler.StragglerMonitor(z_threshold=2.0, min_steps=5)
+        rng = np.random.default_rng(0)
+        for step in range(20):
+            for h in range(8):
+                base = 1.0 + 0.01 * rng.standard_normal()
+                mon.observe(f"host{h}", base * (5.0 if h == 3 else 1.0))
+        assert mon.stragglers() == ["host3"]
+        assert mon.exclusion_plan() == {"host3": "drain_and_replace"}
+
+    def test_no_false_positives_on_uniform_fleet(self):
+        mon = straggler.StragglerMonitor()
+        for step in range(10):
+            for h in range(8):
+                mon.observe(f"host{h}", 1.0 + 0.001 * h)
+        assert mon.stragglers() == []
+
+
+class TestElastic:
+    def test_plan_shrinks_data_axis_only(self):
+        plan = elastic.plan_remesh(
+            old_shape=(16, 16), axis_names=("data", "model"), n_lost_chips=16)
+        assert plan.new_shape[1] == 16          # model preserved
+        assert plan.new_shape[0] == 8           # data shrinks to pow2 fit
+        assert plan.microbatch_multiplier == 2  # global batch preserved
+
+    def test_plan_multipod(self):
+        plan = elastic.plan_remesh(
+            old_shape=(2, 16, 16), axis_names=("pod", "data", "model"),
+            n_lost_chips=256)
+        assert plan.new_shape[-1] == 16
+        assert np.prod(plan.new_shape) <= 256
+
+    def test_model_axis_unrecoverable(self):
+        with pytest.raises(ValueError):
+            elastic.plan_remesh(old_shape=(2, 16), axis_names=("data", "model"),
+                                n_lost_chips=20)
+
+    def test_checkpoint_reshard_roundtrip(self, tmp_path):
+        """A checkpoint restores bit-exactly regardless of target sharding
+        (single-device here; the 512-device path is the dry-run's job)."""
+        d = str(tmp_path)
+        t = _tree(2.5)
+        ckpt.save(d, 1, t)
+        sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+        shardings = jax.tree.map(lambda _: sh, t)
+        restored, _ = ckpt.restore(d, t, shardings=shardings)
+        np.testing.assert_allclose(np.asarray(restored["a"]), np.asarray(t["a"]))

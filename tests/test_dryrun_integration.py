@@ -1,0 +1,52 @@
+"""Dry-run integration: one real cell compiles end-to-end in a subprocess.
+
+The subprocess is required because the dry-run pins
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before jax init;
+the main test process must keep its single CPU device.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, tmp):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args, "--out", tmp],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+
+
+@pytest.mark.parametrize("multi_pod", [False, True], ids=["16x16", "2x16x16"])
+def test_decode_cell_compiles(tmp_path, multi_pod):
+    args = ["--arch", "qwen3-0.6b", "--shape", "decode_32k"]
+    if multi_pod:
+        args.append("--multi-pod")
+    r = _run(args, str(tmp_path))
+    assert r.returncode == 0, r.stdout + r.stderr
+    mesh = "multipod" if multi_pod else "singlepod"
+    path = tmp_path / f"qwen3-0.6b__decode_32k__{mesh}.json"
+    rec = json.loads(path.read_text())
+    assert rec["status"] == "ok"
+    assert rec["n_chips"] == (512 if multi_pod else 256)
+    assert rec["hlo_cost"]["flops_per_device"] > 0
+    # decode must fit the 16 GB v5e budget
+    mem = (rec["memory_analysis"]["temp_size_in_bytes"]
+           + rec["memory_analysis"]["argument_size_in_bytes"])
+    assert mem < 16 * 2**30, f"decode cell uses {mem/2**30:.1f} GB"
+
+
+def test_rule_overrides_flow_through(tmp_path):
+    """Hillclimb overrides reach the lowering (artifact records them)."""
+    r = _run(["--arch", "smollm-135m", "--shape", "decode_32k",
+              "--rule-overrides", '{"kv_seq": "data"}', "--tag", "t1"],
+             str(tmp_path))
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(
+        (tmp_path / "smollm-135m__decode_32k__singlepod.t1.json").read_text())
+    assert rec["parallel"]["rule_overrides"] == {"kv_seq": "data"}

@@ -1,0 +1,61 @@
+"""End-to-end Iris (paper §III.A): encode -> train -> quantize -> UART
+download -> integer LIF inference. Validates the paper's functional-
+correctness claim through the full register-bank path."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_bundle
+from repro.core import classifier, encoding
+from repro.data import iris
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_bundle("iris-snn").model
+    x, y = iris.load(seed=0)
+    xn = iris.normalize(x)
+    # paper's level coding (Fig. 5): quantized integer impulse magnitudes
+    levels = np.asarray(encoding.level_encode(xn, levels=4))
+    (xtr, ytr), (xte, yte) = iris.train_test_split(levels, y, test_frac=0.3)
+    model = classifier.train(xtr, ytr, cfg)
+    return cfg, model, (xtr, ytr), (xte, yte)
+
+
+def test_float_train_accuracy(trained):
+    _, model, (xtr, ytr), _ = trained
+    acc = classifier.accuracy(classifier.predict_float(model, xtr), ytr)
+    assert acc >= 0.90, f"float train acc {acc}"
+
+
+def test_int_inference_through_register_bank(trained):
+    cfg, model, _, (xte, yte) = trained
+    dep = classifier.deploy(model, n_neurons=cfg.n_neurons)
+    assert dep.bank.n == 7                     # 4 input + 3 output (Fig. 4)
+    assert dep.bank.breakdown().total == len(dep.bank.serialize())
+    pred = classifier.predict_int(dep, xte)
+    acc = classifier.accuracy(pred, yte)
+    assert acc >= 0.85, f"integer datapath acc {acc}"
+
+
+def test_int_matches_float_mostly(trained):
+    """u8 quantization must not change more than a few decisions."""
+    cfg, model, _, (xte, yte) = trained
+    dep = classifier.deploy(model, n_neurons=cfg.n_neurons)
+    pf = classifier.predict_float(model, xte)
+    pi = classifier.predict_int(dep, xte)
+    agreement = (pf == pi).mean()
+    assert agreement >= 0.9, f"float/int agreement {agreement}"
+
+
+def test_reprogram_cost_matches_paper_model(trained):
+    """The Iris system's register download cost under the paper's timing."""
+    cfg, model, _, _ = trained
+    dep = classifier.deploy(model, n_neurons=cfg.n_neurons)
+    bd = dep.bank.breakdown()
+    # 7 neurons, per-synapse layout: 7*1 CL + 7 th + 49 w + 1 imp = 64 bytes
+    assert bd.connection_list == 7
+    assert bd.weights == 49
+    assert bd.total == 64

@@ -1,0 +1,69 @@
+"""Spike encoders/decoders + u8 quantization."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import encoding, quant
+
+
+class TestEncoding:
+    def test_binarize(self):
+        x = jnp.asarray([0.0, 0.4, 0.6, 1.0])
+        np.testing.assert_array_equal(encoding.binarize(x, 0.5), [0, 0, 1, 1])
+
+    @settings(deadline=None, max_examples=40)
+    @given(st.floats(0, 1), st.integers(1, 32))
+    def test_rate_code_count_matches_value(self, frac, n_ticks):
+        spikes = encoding.rate_encode(jnp.asarray([frac]), n_ticks)
+        count = float(spikes.sum())
+        assert abs(count - round(frac * n_ticks)) <= 1
+
+    def test_level_encode_matches_fig5(self):
+        # Fig. 5 impulse registers: quantized feature levels like 01/02/04.
+        x = jnp.asarray([0.25, 0.5, 1.0, 0.0])
+        np.testing.assert_array_equal(encoding.level_encode(x, levels=4),
+                                      [1, 2, 4, 0])
+
+    def test_latency_earlier_for_stronger(self):
+        sp = encoding.latency_encode(jnp.asarray([1.0, 0.5, 0.0]), 8)
+        first = np.argmax(np.asarray(sp), axis=0)
+        assert first[0] < first[1]
+        assert np.asarray(sp)[:, 2].sum() == 0  # zero input never spikes
+
+    def test_decoders(self):
+        t, n = 6, 3
+        spikes = np.zeros((t, n), np.float32)
+        spikes[1, 2] = 1
+        spikes[2:5, 0] = 1
+        sp = jnp.asarray(spikes)
+        assert int(encoding.decode_spike_count(sp)) == 0       # most spikes
+        assert int(encoding.decode_first_spike(sp)) == 2       # earliest
+
+
+class TestQuant:
+    @settings(deadline=None, max_examples=30)
+    @given(st.integers(0, 2**31 - 1))
+    def test_u8_roundtrip_error_bounded(self, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.uniform(0, 3, (16, 16)).astype(np.float32))
+        qw = quant.quantize_u8(w)
+        back = quant.dequantize_u8(qw)
+        assert float(jnp.abs(back - w).max()) <= float(qw.scale) / 2 + 1e-6
+
+    def test_signed_split_reconstructs(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+        pos, neg = quant.quantize_signed(w)
+        recon = quant.dequantize_u8(pos) - quant.dequantize_u8(neg)
+        assert float(jnp.abs(recon - w).max()) <= float(pos.scale) + 1e-6
+
+    def test_integer_network_semantics(self):
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+        v_th = jnp.asarray(rng.uniform(0.5, 1.5, 8).astype(np.float32))
+        w_int, th_int, scale = quant.integer_network(w, v_th)
+        assert w_int.dtype == jnp.int32 and th_int.dtype == jnp.int32
+        # integer weights on the shared grid approximate w / scale
+        np.testing.assert_allclose(
+            np.asarray(w_int) * float(scale), np.asarray(w), atol=float(scale))

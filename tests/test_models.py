@@ -1,0 +1,170 @@
+"""Per-arch smoke tests (deliverable f) + serving consistency + family units.
+
+Every assigned architecture instantiates its REDUCED config and runs one
+forward/train step on CPU asserting output shapes + no NaNs, plus a
+prefill+decode consistency check against the full forward.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_bundle
+from repro.models import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B, S, key=KEY, with_targets=True):
+    if cfg.family == "audio":
+        toks = jax.random.randint(key, (B, S, cfg.n_codebooks), 0, cfg.vocab_size)
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    out = {"inputs": toks}
+    if with_targets:
+        out["targets"] = jnp.roll(toks, -1, axis=1)
+    if cfg.family == "vlm":
+        out["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.n_vision_tokens, cfg.d_vision), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_bundle(arch).smoke
+    params = M.init(cfg, KEY)
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    loss, metrics = M.loss_fn(params, cfg, batch, remat="none")
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    grads = jax.grad(lambda p: M.loss_fn(p, cfg, batch, remat="none")[0])(params)
+    for leaf in jax.tree.leaves(grads):
+        assert jnp.isfinite(leaf.astype(jnp.float32)).all(), f"{arch}: NaN grad"
+    logits, _, _ = M.forward(params, cfg, batch["inputs"], mode="train",
+                             vision_embeds=batch.get("vision_embeds"), remat="none")
+    if cfg.family == "audio":
+        assert logits.shape == (B, S, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_remat_matches(arch):
+    """Gradient checkpointing must not change the loss."""
+    cfg = get_bundle(arch).smoke
+    params = M.init(cfg, KEY)
+    batch = _batch(cfg, 2, 8)
+    l0, _ = M.loss_fn(params, cfg, batch, remat="none")
+    l1, _ = M.loss_fn(params, cfg, batch, remat="block")
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Serving path (prefill + decode w/ caches) == teacher-forced forward.
+
+    capacity_factor is raised so MoE dispatch is dropless in both paths
+    (capacity drops are a train-time batching artifact; serving headroom
+    is the production default -- see ffn.DECODE_CAPACITY_FACTOR)."""
+    cfg = dataclasses.replace(get_bundle(arch).smoke, capacity_factor=8.0)
+    params = M.init(cfg, KEY)
+    B, S = 2, 12
+    batch = _batch(cfg, B, S, with_targets=False)
+    toks = batch["inputs"]
+    logits_full, _, _ = M.forward(
+        params, cfg, toks, mode="train",
+        vision_embeds=batch.get("vision_embeds"), remat="none")
+
+    caches = M.init_cache(cfg, B, S)
+    pre = {"inputs": toks[:, : S - 1]}
+    if cfg.family == "vlm":
+        pre["vision_embeds"] = batch["vision_embeds"]
+    last_pre, caches = M.prefill_fn(params, cfg, pre, caches)
+    np.testing.assert_allclose(
+        np.asarray(last_pre, np.float32),
+        np.asarray(logits_full[:, S - 2], np.float32), rtol=2e-3, atol=2e-3)
+
+    dec = {"token": toks[:, S - 1 :][:, :1] if cfg.family != "audio" else toks[:, S - 1 : S],
+           "pos": jnp.asarray(S - 1, jnp.int32)}
+    dec["token"] = toks[:, S - 1 : S]
+    dlog, _ = M.decode_fn(params, cfg, dec, caches)
+    np.testing.assert_allclose(
+        np.asarray(dlog, np.float32),
+        np.asarray(logits_full[:, S - 1], np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_attention_matches_direct(monkeypatch):
+    """Flash-style q-chunked attention == direct attention."""
+    from repro.models import attention as A
+
+    cfg = get_bundle("qwen3-0.6b").smoke
+    params = M.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, 64), 0, cfg.vocab_size)
+    ref, _, _ = M.forward(params, cfg, toks, mode="train", remat="none")
+    monkeypatch.setattr(A, "Q_CHUNK", 16)  # force the chunked path
+    got, _, _ = M.forward(params, cfg, toks, mode="train", remat="none")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_overflow():
+    """Tokens beyond expert capacity are dropped (output = residual only)."""
+    from repro.models import ffn as F
+
+    cfg = dataclasses.replace(
+        get_bundle("llama4-scout-17b-a16e").smoke,
+        n_experts=2, top_k=1, capacity_factor=0.51, n_shared_experts=0)
+    specs = F.moe_ffn_specs(cfg)
+    from repro.models.common import init_params
+    p = init_params(specs, KEY, jnp.float32)
+    # Identical tokens route identically -> all 16 claim one expert.
+    x = jnp.ones((1, 16, cfg.d_model), jnp.float32)
+    y, aux = F.moe_ffn(x, p, cfg)
+    # capacity = ceil(1 * 16 * 0.51 / 2) = 5 -> 11 of 16 tokens dropped:
+    # their rows pass through unchanged (residual).
+    delta = np.abs(np.asarray(y - x)).sum(axis=-1)[0]
+    n_processed = int((delta > 1e-6).sum())
+    assert n_processed == 5, f"expected 5 processed tokens, got {n_processed}"
+    assert jnp.isfinite(aux)
+
+
+def test_rwkv_decay_in_unit_interval():
+    """The data-dependent decay (learned leak) stays in (0, 1)."""
+    from repro.models import rwkv as R
+
+    cfg = get_bundle("rwkv6-1.6b").smoke
+    params = M.init(cfg, KEY)
+    p = params["stages"][0]["layer0"]["mixer"]
+    p0 = jax.tree.map(lambda a: a[0], p)
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model), jnp.float32)
+    # probe the decay computation through the public path: finite outputs
+    y, _, _ = R.rwkv_time_mix(x, p0, cfg)
+    assert jnp.isfinite(y).all()
+
+
+def test_mamba_chunked_scan_matches_naive():
+    """Nested chunked selective scan == plain per-step reference."""
+    from repro.models import ssm as S
+
+    rng = np.random.default_rng(0)
+    b, s, di, n = 2, 32, 8, 4
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (s, b, di)).astype(np.float32))
+    bm = jnp.asarray(rng.normal(size=(s, b, n)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(s, b, n)).astype(np.float32))
+    xc = jnp.asarray(rng.normal(size=(s, b, di)).astype(np.float32))
+    a = -jnp.asarray(rng.uniform(0.5, 2.0, (di, n)).astype(np.float32))
+
+    ys, hT = S._selective_scan(h0, dt, bm, cm, xc, a)
+
+    h = np.zeros((b, di, n), np.float32)
+    for t in range(s):
+        decay = np.exp(np.asarray(dt[t])[..., None] * np.asarray(a))
+        h = decay * h + (np.asarray(dt[t]) * np.asarray(xc[t]))[..., None] * np.asarray(bm[t])[:, None, :]
+        y_ref = np.einsum("ben,bn->be", h, np.asarray(cm[t]))
+        np.testing.assert_allclose(np.asarray(ys[t]), y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), h, rtol=1e-4, atol=1e-4)

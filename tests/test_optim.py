@@ -1,0 +1,114 @@
+"""Optimizers, schedules, clipping, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adafactor, adamw, clip, compression, schedule
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestAdamW:
+    def test_matches_reference_formula(self):
+        p = {"w": jnp.asarray([1.0, -2.0])}
+        g = {"w": jnp.asarray([0.5, 0.5])}
+        st = adamw.init(p)
+        lr, b1, b2, eps, wd = 0.1, 0.9, 0.95, 1e-8, 0.0
+        newp, st2 = adamw.update(g, st, p, lr=lr, b1=b1, b2=b2, eps=eps,
+                                 weight_decay=wd)
+        m = (1 - b1) * 0.5
+        v = (1 - b2) * 0.25
+        mhat = m / (1 - b1)
+        vhat = v / (1 - b2)
+        want = np.asarray([1.0, -2.0]) - lr * mhat / (np.sqrt(vhat) + eps)
+        np.testing.assert_allclose(np.asarray(newp["w"]), want, rtol=1e-6)
+        assert int(st2.step) == 1
+
+    def test_weight_decay_direction(self):
+        p = {"w": jnp.asarray([10.0])}
+        g = {"w": jnp.asarray([0.0])}
+        st = adamw.init(p)
+        newp, _ = adamw.update(g, st, p, lr=0.1, weight_decay=0.1)
+        assert float(newp["w"][0]) < 10.0
+
+    def test_bf16_state(self):
+        p = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+        st = adamw.init(p, jnp.bfloat16)
+        assert st.m["w"].dtype == jnp.bfloat16
+        g = {"w": jnp.full((4, 4), 0.1, jnp.bfloat16)}
+        newp, st2 = adamw.update(g, st, p, lr=0.01)
+        assert newp["w"].dtype == jnp.bfloat16
+        assert jnp.isfinite(newp["w"].astype(jnp.float32)).all()
+
+    def test_converges_on_quadratic(self):
+        p = {"w": jnp.asarray([5.0, -3.0])}
+        st = adamw.init(p)
+        for _ in range(300):
+            g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+            p, st = adamw.update(g, st, p, lr=0.05, weight_decay=0.0)
+        assert float(jnp.abs(p["w"]).max()) < 0.1
+
+
+class TestAdafactor:
+    def test_factored_state_shapes(self):
+        p = {"w": jnp.ones((8, 4)), "b": jnp.ones((4,))}
+        st = adafactor.init(p)
+        assert st.vr["w"].shape == (8,)
+        assert st.vc["w"].shape == (4,)
+        assert st.vr["b"].shape == (4,)
+
+    def test_converges_on_quadratic(self):
+        p = {"w": jnp.full((4, 4), 3.0)}
+        st = adafactor.init(p)
+        for _ in range(200):
+            g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+            p, st = adafactor.update(g, st, p, lr=0.05)
+        assert float(jnp.abs(p["w"]).max()) < 0.3
+
+
+class TestClipSchedule:
+    def test_clip_reduces_norm(self):
+        g = {"a": jnp.full((10,), 10.0)}
+        clipped, norm = clip.clip_by_global_norm(g, 1.0)
+        assert float(norm) > 1.0
+        assert float(clip.global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+    def test_clip_noop_below_threshold(self):
+        g = {"a": jnp.asarray([0.1])}
+        clipped, _ = clip.clip_by_global_norm(g, 1.0)
+        np.testing.assert_allclose(np.asarray(clipped["a"]), [0.1], rtol=1e-6)
+
+    def test_warmup_cosine(self):
+        lr0 = schedule.warmup_cosine(jnp.asarray(0), peak_lr=1.0,
+                                     warmup_steps=10, total_steps=100)
+        lr_peak = schedule.warmup_cosine(jnp.asarray(10), peak_lr=1.0,
+                                         warmup_steps=10, total_steps=100)
+        lr_end = schedule.warmup_cosine(jnp.asarray(100), peak_lr=1.0,
+                                        warmup_steps=10, total_steps=100)
+        assert float(lr0) == 0.0
+        assert float(lr_peak) == pytest.approx(1.0)
+        assert float(lr_end) == pytest.approx(0.1, rel=1e-3)
+
+
+class TestCompression:
+    def test_roundtrip_within_scale(self):
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)).astype(np.float32))}
+        st = compression.init(g)
+        (q, scales), st2 = compression.compress(g, st)
+        assert q["w"].dtype == jnp.int8
+        back = compression.decompress((q, scales))
+        err = np.abs(np.asarray(back["w"]) - np.asarray(g["w"]))
+        assert err.max() <= float(scales["w"]) * 0.5 + 1e-7
+
+    def test_error_feedback_corrects_bias(self):
+        """Over repeated steps of the SAME gradient, the accumulated applied
+        update converges to the true sum (error feedback carries residuals)."""
+        g = {"w": jnp.asarray([0.301, -0.299, 0.003])}
+        st = compression.init(g)
+        applied = np.zeros(3)
+        n = 50
+        for _ in range(n):
+            (q, scales), st = compression.compress(g, st)
+            applied += np.asarray(compression.decompress((q, scales))["w"])
+        np.testing.assert_allclose(applied, n * np.asarray(g["w"]), rtol=0.02, atol=1e-3)

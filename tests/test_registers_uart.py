@@ -1,0 +1,113 @@
+"""Register bank + UART codec: the paper's §II.C/§III.B arithmetic, exactly."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import connectivity, uart
+from repro.core.registers import (
+    RegisterBank, TimingModel, WeightLayout, transaction_breakdown,
+)
+
+
+class TestPaperArithmetic:
+    def test_74_neuron_breakdown(self):
+        """§III.B: 740 CL + 74 thresholds + 74 weights + 10 impulses = 898."""
+        bd = transaction_breakdown(74)
+        assert bd.connection_list == 740
+        assert bd.thresholds == 74
+        assert bd.weights == 74
+        assert bd.impulses == 10
+        assert bd.total == 898
+
+    def test_74_neuron_time_93_54_ms(self):
+        bd = transaction_breakdown(74)
+        assert abs(bd.time_s(TimingModel.PAPER) * 1e3 - 93.54) < 0.02
+
+    def test_single_neuron_416us(self):
+        bd = transaction_breakdown(1)
+        assert bd.total == 4
+        assert abs(bd.time_s(TimingModel.PAPER) * 1e6 - 416.68) < 1.0
+
+    def test_wire_model_is_10x_paper(self):
+        bd = transaction_breakdown(74)
+        assert bd.time_s(TimingModel.WIRE_8N1) == pytest.approx(
+            10 * bd.time_s(TimingModel.PAPER))
+
+
+class TestRegisterBank:
+    def test_serialize_roundtrip(self):
+        rng = np.random.default_rng(0)
+        bank = RegisterBank(74)
+        bank.set_connection_list(connectivity.layered([64, 10]))
+        bank.set_thresholds(rng.integers(0, 256, 74))
+        bank.set_weights(rng.integers(0, 256, 74))
+        bank.set_impulses(rng.integers(0, 2, 74))
+        payload = bank.serialize()
+        assert len(payload) == 898
+        bank2 = RegisterBank(74)
+        bank2.load_bytes(payload)
+        np.testing.assert_array_equal(bank2.get_connection_list(), bank.get_connection_list())
+        np.testing.assert_array_equal(bank2.thresholds, bank.thresholds)
+        np.testing.assert_array_equal(bank2.weights, bank.weights)
+        np.testing.assert_array_equal(bank2.get_impulses(), bank.get_impulses())
+
+    def test_per_synapse_layout(self):
+        bank = RegisterBank(8, weight_layout=WeightLayout.PER_SYNAPSE)
+        assert bank.weights.shape == (8, 8)
+        assert bank.breakdown().weights == 64
+
+    def test_reprogram_never_changes_shapes(self):
+        """The 'no re-synthesis' property: rewriting registers preserves
+        array shapes, so jitted consumers never re-trace."""
+        bank = RegisterBank(16)
+        shapes0 = {k: v.shape for k, v in bank.as_dict().items()}
+        bank.set_connection_list(connectivity.all_to_all(16))
+        bank.set_thresholds(np.full(16, 7))
+        shapes1 = {k: v.shape for k, v in bank.as_dict().items()}
+        assert shapes0 == shapes1
+
+
+class TestUART:
+    def test_frame_roundtrip_exhaustive(self):
+        for b in range(256):
+            assert uart.decode_frame(uart.encode_frame(b)) == b
+
+    @settings(deadline=None, max_examples=50)
+    @given(st.binary(min_size=0, max_size=200))
+    def test_stream_roundtrip(self, payload):
+        assert uart.decode_stream(uart.encode_stream(payload)) == payload
+
+    def test_bad_start_bit_rejected(self):
+        bits = uart.encode_frame(0x41)
+        bits[0] = 1
+        with pytest.raises(ValueError):
+            uart.decode_frame(bits)
+
+    def test_wire_time(self):
+        # 898 bytes at 9600-8N1 = 935.4 ms (vs paper's 93.54 ms figure)
+        assert uart.wire_time_s(898) == pytest.approx(0.9354, rel=1e-3)
+
+    def test_host_link_stats(self):
+        link = uart.HostLink()
+        link.send(b"abc")
+        link.receive(b"de")
+        assert link.stats.bytes_tx == 3 and link.stats.bytes_rx == 2
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(1, 200))
+def test_breakdown_generalizes(n):
+    """total = N*ceil(N/8) + 2N + ceil(N/8) for any N."""
+    import math
+    bd = transaction_breakdown(n)
+    rb = math.ceil(n / 8)
+    assert bd.total == n * rb + 2 * n + rb
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(2, 64), st.integers(0, 2**32 - 1))
+def test_connectivity_pack_roundtrip(n, seed):
+    c = connectivity.sparse_random(n, 0.5, seed=seed)
+    packed = connectivity.pack_bits(c)
+    np.testing.assert_array_equal(connectivity.unpack_bits(packed, n), c)

@@ -1,0 +1,79 @@
+"""Logical-axis sharding rules: specs, overrides, dedup, constrain no-op."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (
+    AxisRules, BASE_RULES, constrain, fsdp_overrides, multipod_overrides,
+    use_rules,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_spec_basic():
+    r = AxisRules(BASE_RULES)
+    assert r.spec(("batch", "seq", "embed")) == P("data", None, None)
+    assert r.spec(("vocab", "embed_param")) == P("model", None)
+
+
+def test_unknown_axis_raises():
+    r = AxisRules(BASE_RULES)
+    with pytest.raises(KeyError):
+        r.spec(("nonsense",))
+
+
+def test_overrides():
+    r = AxisRules(BASE_RULES).with_overrides(multipod_overrides())
+    assert r.spec(("batch",)) == P(("pod", "data"))
+    r2 = AxisRules(BASE_RULES).with_overrides(fsdp_overrides())
+    assert r2.spec(("qkv_in", "q_heads")) == P("data", "model")
+
+
+def test_duplicate_mesh_axis_dedup():
+    """Colliding rules (Megatron-SP seq=model meeting heads=model) must not
+    produce an invalid spec -- earlier dims win."""
+    r = AxisRules(BASE_RULES).with_overrides({"seq": "model"})
+    spec = r.spec(("batch", "seq", "act_heads"))
+    assert spec == P("data", "model", None)
+
+
+def test_constrain_noop_without_rules():
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", "embed") is x
+
+
+def test_constrain_rank_mismatch():
+    r = AxisRules(BASE_RULES, mesh=None)
+    with use_rules(r):
+        # mesh None -> no-op regardless
+        x = jnp.ones((2, 2))
+        assert constrain(x, "batch", "embed") is x
+
+
+def test_make_rules_shapes():
+    """Rule assembly per shape kind (no devices needed: mesh=None path)."""
+    from repro.configs import get_bundle
+    from repro.configs.base import SHAPES
+
+    # exercise the pure-logic parts via AxisRules directly
+    r = AxisRules(BASE_RULES).with_overrides({"kv_seq": "model"})
+    assert r.spec(("batch", "kv_seq", None)) == P("data", "model", None)
+    bundle = get_bundle("jamba-1.5-large-398b")
+    assert bundle.parallel_for("train_4k").fsdp
+    assert bundle.parallel_for("decode_32k").fsdp  # falls back to "*"
+
+
+def test_head_maps():
+    from repro.configs import get_bundle
+    from repro.models.attention import head_maps, padded_q_heads
+    import dataclasses
+
+    cfg = dataclasses.replace(get_bundle("smollm-135m").model)  # 9 heads, pad 16
+    assert padded_q_heads(cfg) == 16
+    to_kv, mask = head_maps(cfg)
+    assert mask.sum() == 9              # 9 live, 7 dead
+    assert to_kv.max() < cfg.n_kv_heads
+    # real heads group 3 q per kv
+    assert list(to_kv[:9]) == [0, 0, 0, 1, 1, 1, 2, 2, 2]

@@ -1,0 +1,101 @@
+"""System-level invariants across the whole package."""
+import math
+
+import jax
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.configs import ASSIGNED_ARCHS, get_bundle
+from repro.configs.base import SHAPES, applicable_shapes
+
+
+def test_assigned_configs_match_spec():
+    """Every assigned architecture carries the exact published dims."""
+    spec = {
+        "llama4-scout-17b-a16e": dict(n_layers=48, d_model=5120, n_heads=40,
+                                      n_kv_heads=8, d_ff=8192, vocab_size=202048,
+                                      n_experts=16, top_k=1),
+        "moonshot-v1-16b-a3b": dict(n_layers=48, d_model=2048, n_heads=16,
+                                    n_kv_heads=16, d_ff=1408, vocab_size=163840,
+                                    n_experts=64, top_k=6),
+        "qwen3-0.6b": dict(n_layers=28, d_model=1024, n_heads=16, n_kv_heads=8,
+                           d_ff=3072, vocab_size=151936, qk_norm=True),
+        "starcoder2-15b": dict(n_layers=40, d_model=6144, n_heads=48,
+                               n_kv_heads=4, d_ff=24576, vocab_size=49152),
+        "smollm-135m": dict(n_layers=30, d_model=576, n_heads=9, n_kv_heads=3,
+                            d_ff=1536, vocab_size=49152),
+        "smollm-360m": dict(n_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+                            d_ff=2560, vocab_size=49152),
+        "jamba-1.5-large-398b": dict(n_layers=72, d_model=8192, n_heads=64,
+                                     n_kv_heads=8, d_ff=24576, vocab_size=65536,
+                                     n_experts=16, top_k=2),
+        "llama-3.2-vision-90b": dict(n_layers=100, d_model=8192, n_heads=64,
+                                     n_kv_heads=8, d_ff=28672, vocab_size=128256),
+        "rwkv6-1.6b": dict(n_layers=24, d_model=2048, d_ff=7168, vocab_size=65536),
+        "musicgen-large": dict(n_layers=48, d_model=2048, n_heads=32,
+                               n_kv_heads=32, d_ff=8192, vocab_size=2048,
+                               n_codebooks=4),
+    }
+    for arch, expect in spec.items():
+        cfg = get_bundle(arch).model
+        for k, v in expect.items():
+            assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_param_counts_in_published_ballpark():
+    """Total parameter counts land near the names on the tin."""
+    from repro.models import model as M
+
+    expectations = {  # (arch, low, high) in billions
+        "llama4-scout-17b-a16e": (90, 120),   # 17B active / ~109B total
+        "moonshot-v1-16b-a3b": (25, 32),  # assigned spec w/o MLA compression
+        "qwen3-0.6b": (0.55, 0.65),
+        "starcoder2-15b": (14, 17),
+        "smollm-135m": (0.11, 0.18),
+        "smollm-360m": (0.3, 0.45),
+        "jamba-1.5-large-398b": (330, 440),
+        "llama-3.2-vision-90b": (80, 100),
+        "rwkv6-1.6b": (1.3, 2.0),
+        "musicgen-large": (2.5, 4.0),
+    }
+    for arch, (lo, hi) in expectations.items():
+        n = M.n_params(get_bundle(arch).model) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo}, {hi}]"
+
+
+def test_long_context_skip_rule():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §5)."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_bundle(arch).model
+        shapes = applicable_shapes(cfg)
+        if arch in ("rwkv6-1.6b", "jamba-1.5-large-398b"):
+            assert "long_500k" in shapes, arch
+        else:
+            assert "long_500k" not in shapes, arch
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shapes)
+
+
+def test_dryrun_matrix_has_32_baseline_cells():
+    """8 full-attention archs x 3 shapes + 2 sub-quadratic x 4 = 32 LM cells
+    per mesh (the assignment's 40-cell grid minus the 8 documented
+    long_500k skips)."""
+    total = sum(len(applicable_shapes(get_bundle(a).model)) for a in ASSIGNED_ARCHS)
+    assert total == 32
+
+
+def test_tp_divisibility_invariants():
+    """Every model-axis-sharded parameter dim divides the 16-way TP width."""
+    from repro.models import model as M
+    from repro.models.common import is_spec
+    from repro.parallel.sharding import BASE_RULES
+
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_bundle(arch).model
+        specs = jax.tree.leaves(M.specs(cfg), is_leaf=is_spec)
+        for s in specs:
+            for dim, ax in zip(s.shape, s.axes):
+                if ax is None:
+                    continue
+                if BASE_RULES.get(ax) == "model":
+                    assert dim % 16 == 0, f"{arch}: axis {ax} dim {dim} !% 16"
