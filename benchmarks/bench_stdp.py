@@ -1,0 +1,80 @@
+"""Learning-tick vs inference-tick throughput (plasticity subsystem cost).
+
+The FLOP model: an inference tick is one masked matmul (2*B*K*N); a
+learning tick adds the two batch-contracted outer products of pair STDP
+(2 * 2*B*K*N) plus elementwise trace/clip work -- a ~3x FLOP multiplier,
+but the fused kernel keeps it to one extra HBM round-trip for (w, elig),
+so the *measured* overhead on real hardware should sit well under 3x for
+the bandwidth-bound small-N regime (the FPGA's regime; NeuroCoreX charges
+zero extra cycles by co-locating the MAC with the synapse cell).
+
+CPU wall-times here are structure, not speed (interpret-mode Pallas is
+not benchmarked -- it is a correctness vehicle); the jnp path is jitted
+and representative of relative scan-loop cost.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import connectivity
+from repro.core.lif import LIFParams
+from repro.core.network import SNNParams, SNNState, learning_rollout, rollout
+from repro.plasticity import PlasticityParams, PlasticityState
+
+
+def _time(fn, *args, repeats=10):
+    jax.block_until_ready(fn(*args))  # compile
+    jax.block_until_ready(fn(*args))  # warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / repeats
+
+
+def run() -> Dict:
+    out: Dict = {"bench": "stdp learning-tick vs inference-tick"}
+    ticks, b = 32, 16
+    pp = PlasticityParams.make("stdp", a_plus=0.1, a_minus=0.05, w_max=255.0)
+    ppr = PlasticityParams.make("rstdp", a_plus=0.1, a_minus=0.05, w_max=255.0)
+    for n in (74, 256, 1024):
+        rng = np.random.default_rng(n)
+        c = connectivity.sparse_random(n, 0.5, seed=1).astype(np.float32)
+        params = SNNParams(
+            w=jnp.asarray(rng.uniform(0, 16, (n, n)), jnp.float32),
+            c=jnp.asarray(c),
+            w_in=jnp.eye(n, dtype=jnp.float32),
+            lif=LIFParams.make(n, v_th=8.0, leak=1.0))
+        ext = jnp.asarray(
+            (rng.random((ticks, b, n)) < 0.05).astype(np.float32))
+        state = SNNState.zeros((b,), n)
+        pstate = PlasticityState.zeros((b,), n)
+
+        infer = jax.jit(lambda p, s, e: rollout(p, s, e, ticks)[1])
+        learn = jax.jit(lambda p, s, ps, e: learning_rollout(
+            p, s, ps, e, ticks, plasticity=pp)[1])
+        learn_r = jax.jit(lambda p, s, ps, e: learning_rollout(
+            p, s, ps, e, ticks, plasticity=ppr)[1])
+
+        t_inf = _time(infer, params, state, ext)
+        t_stdp = _time(learn, params, state, pstate, ext)
+        t_rstdp = _time(learn_r, params, state, pstate, ext)
+
+        inf_flops = 2 * b * n * n * ticks
+        learn_flops = 3 * inf_flops  # + 2 outer products per tick
+        out[f"n{n}_infer_ticks_per_s"] = round(ticks * b / t_inf, 1)
+        out[f"n{n}_stdp_ticks_per_s"] = round(ticks * b / t_stdp, 1)
+        out[f"n{n}_rstdp_ticks_per_s"] = round(ticks * b / t_rstdp, 1)
+        out[f"n{n}_stdp_overhead_x"] = round(t_stdp / t_inf, 2)
+        out[f"n{n}_rstdp_overhead_x"] = round(t_rstdp / t_inf, 2)
+        out[f"n{n}_flop_model_overhead_x"] = round(learn_flops / inf_flops, 2)
+    return out
+
+
+if __name__ == "__main__":
+    for k, v in run().items():
+        print(f"{k}: {v}")

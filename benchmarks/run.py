@@ -15,12 +15,16 @@ def main() -> None:
                     help="skip the training-heavy benches")
     args = ap.parse_args()
 
-    from benchmarks import bench_iris, bench_latency, bench_mnist, bench_snn_scale, bench_uart
+    from benchmarks import (
+        bench_iris, bench_latency, bench_mnist, bench_snn_scale, bench_stdp,
+        bench_uart,
+    )
 
     benches = [
         ("uart", bench_uart.run),
         ("latency", bench_latency.run),
         ("snn_scale", bench_snn_scale.run),
+        ("stdp", bench_stdp.run),
     ]
     if not args.fast:
         benches += [("iris", bench_iris.run), ("mnist", bench_mnist.run)]

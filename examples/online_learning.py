@@ -1,0 +1,375 @@
+"""On-device learning on the MNIST-8x8 fabric: STDP features + R-STDP readout.
+
+The paper's processor is inference-only: weights are trained off-chip and
+streamed in over the UART.  This example runs the *NeuroCoreX direction*
+(arXiv:2506.14138) on the same fabric -- all learning happens inside the
+network tick loop, from a random init, with weights on the u8 register
+grid at every tick:
+
+  stage 1  64 inputs -> 64 feature neurons, pair STDP (unsupervised).
+           Competition = fixed-leak thresholds + host-side homeostasis:
+           every spike bumps the winner's *threshold register* (runtime
+           reconfiguration, no re-synthesis -- the paper's register story
+           doing double duty as the inhibition the fabric lacks).
+  stage 2  64 features -> 10 outputs, R-STDP: eligibility accumulates
+           during the presentation, a terminal +/- dopamine scalar (was
+           the argmax right?) converts it into the weight update.
+  readback the learned u8 weights serialize through the RegisterBank /
+           UART byte protocol and are asserted to produce *identical
+           spikes* after the round trip -- device -> host weight readback.
+
+  PYTHONPATH=src python examples/online_learning.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_bundle
+from repro.configs.mnist_stdp import RUN, N_CLASSES, N_HIDDEN, N_INPUT
+from repro.core import connectivity
+from repro.core.lif import LIFParams
+from repro.core.network import (
+    SNNParams, SNNState, learning_rollout, params_from_registers, rollout,
+)
+from repro.core.registers import RegisterBank, WeightLayout
+from repro.data import mnist
+from repro.plasticity import PlasticityState, apply_reward
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# network construction
+
+
+def plastic_mask() -> jnp.ndarray:
+    """Only the feed-forward input->hidden block learns."""
+    return jnp.asarray(connectivity.layered([N_INPUT, N_HIDDEN]), jnp.float32)
+
+
+def routing_mask() -> np.ndarray:
+    """Feed-forward block + lateral hidden->hidden WTA block (no self-loops)."""
+    c = connectivity.layered([N_INPUT, N_HIDDEN])
+    lat = connectivity.all_to_all(N_HIDDEN)
+    c[N_INPUT:, N_INPUT:] = lat
+    return c
+
+
+def with_lateral_inhibition(w: jnp.ndarray) -> jnp.ndarray:
+    """Install the fixed negative WTA block (the on-chip inhibitory bank)."""
+    lat = -RUN.lateral_inhibition * jnp.asarray(
+        connectivity.all_to_all(N_HIDDEN), jnp.float32)
+    return w.at[N_INPUT:, N_INPUT:].set(lat)
+
+
+def feature_net(w: jnp.ndarray, theta: jnp.ndarray) -> SNNParams:
+    """64 -> 64 feature net with a frozen WTA block; hidden thresholds carry theta."""
+    n = N_INPUT + N_HIDDEN
+    c = jnp.asarray(routing_mask(), jnp.float32)
+    v_th = jnp.ones((n,)).at[N_INPUT:].set(RUN.v_th_base + theta)
+    leak = jnp.zeros((n,)).at[N_INPUT:].set(RUN.leak)
+    lif = LIFParams(
+        v_th=v_th, leak=leak, r_ref=jnp.zeros((n,), jnp.int32),
+        gain=jnp.ones((n,)), i_bias=jnp.zeros((n,)), v_reset=jnp.zeros((n,)))
+    return SNNParams(w=w, c=c, w_in=jnp.eye(n) * 2.0, lif=lif)
+
+
+def readout_net(w: jnp.ndarray) -> SNNParams:
+    """64 -> 10 bipartite readout net driven by replayed feature spikes."""
+    n = N_HIDDEN + N_CLASSES
+    c = jnp.asarray(connectivity.layered([N_HIDDEN, N_CLASSES]), jnp.float32)
+    v_th = jnp.ones((n,)).at[N_HIDDEN:].set(RUN.readout_v_th)
+    lif = LIFParams(
+        v_th=v_th, leak=jnp.zeros((n,)), r_ref=jnp.zeros((n,), jnp.int32),
+        gain=jnp.ones((n,)), i_bias=jnp.zeros((n,)), v_reset=jnp.zeros((n,)))
+    return SNNParams(w=w, c=c, w_in=jnp.eye(n) * 2.0, lif=lif)
+
+
+def _clamp(ext_row: jnp.ndarray, n: int, ticks: int) -> jnp.ndarray:
+    """Level-coded presentation: clamp a spike vector for ``ticks`` ticks."""
+    ext = jnp.zeros((ext_row.shape[0], n)).at[:, : ext_row.shape[1]].set(ext_row)
+    return jnp.broadcast_to(ext[None], (ticks,) + ext.shape)
+
+
+# ---------------------------------------------------------------------------
+# stage 1: unsupervised STDP features
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def stdp_present(w, theta, x, *, backend="jnp"):
+    """One presentation: learning rollout + host-side homeostasis.
+
+    Two slow register-level loops close around the on-device STDP:
+    threshold homeostasis (spikers get harder to fire) and synaptic
+    scaling (each feature neuron's fan-in is renormalized to a fixed
+    budget, so potentiation on the won pattern costs weight elsewhere --
+    receptive fields specialize instead of saturating at w_max).
+    """
+    n = N_INPUT + N_HIDDEN
+    params = feature_net(w, theta)
+    ext = _clamp(x[None], n, RUN.ticks_per_sample)
+    state = SNNState.zeros((1,), n)
+    pstate = PlasticityState.zeros((1,), n)
+    (_, _, w2), raster = learning_rollout(
+        params, state, pstate, ext, RUN.ticks_per_sample,
+        plasticity=RUN.feature, plastic_c=plastic_mask(), backend=backend)
+    ff = w2[:N_INPUT, N_INPUT:]
+    scale = RUN.w_total / jnp.maximum(ff.sum(0), 1e-6)
+    ff = jnp.clip(ff * scale[None, :], RUN.feature.w_min, RUN.feature.w_max)
+    w2 = w2.at[:N_INPUT, N_INPUT:].set(ff)
+    counts = raster[:, 0, N_INPUT:].sum(0)
+    theta2 = jnp.clip(
+        theta + RUN.theta_plus * counts - RUN.theta_drift,
+        RUN.theta_min, RUN.theta_max)
+    return w2, theta2, counts
+
+
+@jax.jit
+def feature_counts(w, theta, xs):
+    """Inference-only feature responses for a batch (no plasticity).
+
+    Returns latency-weighted scores (earlier spike => stronger match --
+    the competition variable the WTA actually races on) and the raster.
+    """
+    n = N_INPUT + N_HIDDEN
+    params = feature_net(w, theta)
+    ext = _clamp(xs, n, RUN.ticks_per_sample)
+    state = SNNState.zeros((xs.shape[0],), n)
+    _, raster = rollout(params, state, ext, RUN.ticks_per_sample)
+    ticks = RUN.ticks_per_sample
+    lat_w = jnp.arange(ticks, 0, -1, dtype=jnp.float32)  # t=0 -> weight T
+    score = jnp.einsum("t,tbn->bn", lat_w, raster[..., N_INPUT:])
+    return score, raster
+
+
+def init_feature_state(rng):
+    """Sparse dispersed receptive fields + jittered thresholds: enough
+    across-neuron drive variance that threshold crossings spread over
+    several ticks, which is what lets the (1-tick-delayed) WTA block pick
+    distinct winners."""
+    n = N_INPUT + N_HIDDEN
+    w = (rng.uniform(RUN.w_init_lo, RUN.w_init_hi, (n, n))
+         * (rng.random((n, n)) < RUN.w_init_density)).astype(np.float32)
+    theta = rng.uniform(0.0, RUN.theta_init_jitter, N_HIDDEN).astype(np.float32)
+    return with_lateral_inhibition(jnp.asarray(w)), jnp.asarray(theta)
+
+
+def train_features(xtr, seed=0, epochs=2, backend="jnp", log_every=200):
+    rng = np.random.default_rng(seed)
+    w, theta = init_feature_state(rng)
+    seen = 0
+    for _ in range(epochs):
+        for i in rng.permutation(len(xtr)):
+            w, theta, _ = stdp_present(w, theta, jnp.asarray(xtr[i]),
+                                       backend=backend)
+            seen += 1
+            if log_every and seen % log_every == 0:
+                wm = w[:N_INPUT, N_INPUT:]
+                print(f"  [stdp] {seen} presentations, "
+                      f"w mean {float(wm.mean()):.2f} / max {float(wm.max()):.1f}, "
+                      f"theta mean {float(theta.mean()):.1f}")
+    return w, theta
+
+
+def neuron_labels(counts: np.ndarray, y: np.ndarray) -> np.ndarray:
+    """Label each feature neuron by the class it responds to most (mean),
+    normalizing away per-neuron excitability differences first."""
+    resp = counts / np.maximum(counts.sum(1, keepdims=True), 1e-6)
+    per_class = np.stack([resp[y == d].mean(0) for d in range(N_CLASSES)])
+    return per_class.argmax(0)
+
+
+def cluster_accuracy(counts_te, yte, labels) -> float:
+    """Diehl&Cook-style readout: average response within each label group,
+    predict the group with the highest mean activity."""
+    counts_te = np.asarray(counts_te)
+    group = np.zeros((len(counts_te), N_CLASSES))
+    for d in range(N_CLASSES):
+        members = labels == d
+        if members.any():
+            group[:, d] = counts_te[:, members].mean(1)
+    return float((group.argmax(1) == yte).mean())
+
+
+# ---------------------------------------------------------------------------
+# stage 2: R-STDP readout
+
+
+@jax.jit
+def rstdp_present(w_out, hid_raster, label):
+    """One readout presentation: bank eligibility, then terminal reward."""
+    n = N_HIDDEN + N_CLASSES
+    ticks = hid_raster.shape[0]
+    params = readout_net(w_out)
+    ext = jnp.zeros((ticks, 1, n)).at[:, 0, :N_HIDDEN].set(hid_raster)
+    state = SNNState.zeros((1,), n)
+    pstate = PlasticityState.zeros((1,), n)
+    (fin, pst, _), raster = learning_rollout(
+        params, state, pstate, ext, ticks, plasticity=RUN.readout)
+    counts = raster[:, 0, N_HIDDEN:].sum(0)
+    # exact drive-image tiebreak (classifier.py idiom): count*th + residual v
+    score = counts * RUN.readout_v_th + fin.lif.v[0, N_HIDDEN:]
+    pred = jnp.argmax(score)
+    reward = jnp.where(pred == label, RUN.reward_correct, RUN.reward_wrong)
+    # Mozafari-style credit assignment: dopamine gates only the *winning*
+    # neuron's synapses (scalar reward + a local "I won" flag) -- right
+    # winners reinforce their active inputs, wrong winners unlearn them.
+    winner_col = jax.nn.one_hot(N_HIDDEN + pred, params.w.shape[0])
+    w2 = apply_reward(
+        w_out, pst.elig * winner_col[None, :], reward, RUN.readout, params.c)
+    return w2, pred
+
+
+@jax.jit
+def readout_predict(w_out, hid_raster_batch):
+    n = N_HIDDEN + N_CLASSES
+    ticks = hid_raster_batch.shape[0]
+    params = readout_net(w_out)
+    b = hid_raster_batch.shape[1]
+    ext = jnp.zeros((ticks, b, n)).at[..., :N_HIDDEN].set(hid_raster_batch)
+    state = SNNState.zeros((b,), n)
+    fin, raster = rollout(params, state, ext, ticks)
+    score = (raster[..., N_HIDDEN:].sum(0) * RUN.readout_v_th
+             + fin.lif.v[:, N_HIDDEN:])
+    return jnp.argmax(score, axis=-1)
+
+
+def train_readout(hid, ytr, seed=0, epochs=3):
+    """``hid``: (T, B, H) feature spike trains (one rollout, reused --
+    the caller already ran feature_counts for the labeling step)."""
+    rng = np.random.default_rng(seed + 1)
+    n = N_HIDDEN + N_CLASSES
+    # random (not constant) init: with identical columns every output spikes
+    # identically, eligibility is column-symmetric, and the scalar reward
+    # could never break the tie
+    w_out = jnp.asarray(rng.uniform(
+        0.5 * RUN.readout_w_init, 1.5 * RUN.readout_w_init,
+        (n, n)).astype(np.float32))
+    for _ in range(epochs):
+        for i in rng.permutation(len(ytr)):
+            w_out, _ = rstdp_present(w_out, hid[:, i], int(ytr[i]))
+    return w_out
+
+
+# ---------------------------------------------------------------------------
+# device readback: learned u8 weights through the UART byte protocol
+
+
+def readback_roundtrip(w, theta):
+    """Quantize learned weights to u8, push through serialize()/load_bytes(),
+    and assert the reloaded device produces identical spikes.
+
+    Only the learned excitatory block lives in the streamed u8 weight
+    registers; the fixed WTA block is the device-local inhibitory bank
+    (reinstalled after load, like ``bias``/``leak`` in classifier.deploy).
+    """
+    from repro.core import uart
+    from repro.plasticity import weights_to_bank
+
+    n = N_INPUT + N_HIDDEN
+    bank = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+    bank.set_connection_list(routing_mask())
+    w_exc = jnp.asarray(w).at[N_INPUT:, N_INPUT:].set(0.0)
+    w_u8 = weights_to_bank(bank, w_exc)
+    th = np.ones((n,))
+    th[N_INPUT:] = np.rint(RUN.v_th_base + np.asarray(theta))
+    bank.set_thresholds(th.astype(np.uint8))
+    leak = np.zeros((n,))
+    leak[N_INPUT:] = RUN.leak
+    bank.set_leak(leak.astype(np.uint8))
+
+    payload = bank.serialize()
+    received = uart.HostLink().send(payload)
+    bank_dev = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+    bank_dev.load_bytes(received)
+    bank_dev.set_leak(bank.leak)            # device-local regs (not streamed)
+    assert bank_dev.serialize() == payload, "register payload not byte-exact"
+    assert np.array_equal(bank_dev.weights, w_u8), "u8 weights changed in flight"
+
+    x, _ = mnist.load(n_per_class=4, seed=7)
+    ext = _clamp(jnp.asarray(mnist.to_spikes(x)), n, RUN.ticks_per_sample)
+
+    def spikes(b):
+        params = params_from_registers(b)
+        params = dataclasses.replace(
+            params, w=with_lateral_inhibition(params.w))
+        state = SNNState.zeros((ext.shape[1],), n)
+        _, raster = rollout(params, state, ext, RUN.ticks_per_sample)
+        return np.asarray(raster)
+
+    before, after = spikes(bank), spikes(bank_dev)
+    assert np.array_equal(before, after), "spikes differ after round trip"
+    return bank_dev, int(before[..., N_INPUT:].sum())
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer samples/epochs (CI smoke)")
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"],
+                    help="plasticity/tick backend for stage 1")
+    args = ap.parse_args()
+
+    cfg = get_bundle("mnist-stdp").model
+    n_per_class = 16 if args.fast else 40
+    epochs = 2 if args.fast else 3
+    x, y = mnist.load(n_per_class=n_per_class, seed=0)
+    spikes = mnist.to_spikes(x)
+    n_test = len(y) // 5
+    xtr, ytr = spikes[n_test:], y[n_test:]
+    xte, yte = spikes[:n_test], y[:n_test]
+    print(f"{cfg.name}: {len(ytr)} train / {len(yte)} test, "
+          f"{N_INPUT}->{N_HIDDEN}->{N_CLASSES} neurons, "
+          f"{RUN.ticks_per_sample} ticks/presentation")
+
+    # baseline: random init, no learning
+    w0, theta0 = init_feature_state(np.random.default_rng(0))
+    c0_tr, _ = feature_counts(w0, theta0, jnp.asarray(xtr))
+    c0_te, _ = feature_counts(w0, theta0, jnp.asarray(xte))
+    acc0 = cluster_accuracy(
+        np.asarray(c0_te), yte, neuron_labels(np.asarray(c0_tr), ytr))
+
+    # stage 1: unsupervised STDP
+    print("stage 1: unsupervised STDP feature learning")
+    w, theta = train_features(xtr, epochs=epochs, backend=args.backend)
+    ctr, rtr = feature_counts(w, theta, jnp.asarray(xtr))
+    cte, rte = feature_counts(w, theta, jnp.asarray(xte))
+    labels = neuron_labels(np.asarray(ctr), ytr)
+    acc1 = cluster_accuracy(np.asarray(cte), yte, labels)
+    print(f"  feature-cluster accuracy: random init {acc0:.3f} -> "
+          f"STDP {acc1:.3f} (chance {1 / N_CLASSES:.2f})")
+    print(f"  distinct class labels among {N_HIDDEN} features: "
+          f"{len(set(labels.tolist()))}")
+
+    # stage 2: R-STDP readout
+    print("stage 2: R-STDP readout (terminal dopamine reward)")
+    w_out = train_readout(rtr[..., N_INPUT:], ytr,
+                          epochs=3 if args.fast else 8)
+    pred = np.asarray(readout_predict(w_out, rte[..., N_INPUT:]))
+    acc2 = float((pred == yte).mean())
+    print(f"  end-to-end test accuracy: {acc2:.3f} (chance {1 / N_CLASSES:.2f})")
+
+    # device readback
+    bank_dev, n_spikes = readback_roundtrip(w, theta)
+    bd = bank_dev.breakdown()
+    print("device readback: learned u8 weights -> serialize -> UART -> load")
+    print(f"  {bd.total} transactions ({bd.connection_list} CL + "
+          f"{bd.thresholds} th + {bd.weights} w + {bd.impulses} imp), "
+          f"spikes identical before/after ({n_spikes} hidden spikes probed)")
+
+    ok = acc1 > max(2 / N_CLASSES, acc0) and acc2 > 2 / N_CLASSES
+    print("PASS" if ok else "FAIL", "- on-device learning separates classes")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -182,6 +182,80 @@ def rollout(
     return jax.lax.scan(body, state, ext_seq)
 
 
+def learning_rollout(
+    params: SNNParams,
+    state: SNNState,
+    plast_state,  # repro.plasticity.stdp.PlasticityState
+    ext_seq: Optional[jax.Array],
+    n_ticks: int,
+    *,
+    plasticity,  # repro.plasticity.stdp.PlasticityParams
+    rewards: Optional[jax.Array] = None,
+    plastic_c: Optional[jax.Array] = None,
+    mode: str = "fixed_leak",
+    backend: str = "jnp",
+    plasticity_backend: Optional[str] = None,
+) -> Tuple[Tuple[SNNState, "object", jax.Array], jax.Array]:
+    """Scan ``n_ticks`` *learning* ticks: the carry holds mutable weights.
+
+    Each tick runs the inference datapath (:func:`step`) with the current
+    weight matrix, then the plasticity datapath
+    (:func:`repro.plasticity.rules.plasticity_step`) on the spikes that
+    tick produced: ``s_pre`` is what arrived at the neurons (the previous
+    tick's emissions, ``max_delay == 1``), ``s_post`` what they emitted.
+    Weights stay masked by ``params.c`` and clipped to the u8 register
+    domain throughout, so the final matrix serializes straight back
+    through :class:`repro.core.registers.RegisterBank`.
+
+    Args:
+      plast_state: initial :class:`~repro.plasticity.stdp.PlasticityState`
+        with batch dims matching ``state``.
+      ext_seq: ``(n_ticks, ..., n_in)`` external drive or None.
+      rewards: ``(n_ticks,)`` scalar dopamine sequence (R-STDP); None
+        means zero reward every tick (eligibility accumulates, weights
+        hold -- apply the episode outcome afterwards with
+        :func:`repro.plasticity.stdp.apply_reward`).
+      plastic_c: learnable-synapse mask; defaults to ``params.c`` (every
+        routed synapse learns).  Pass a sub-mask to freeze part of the
+        fabric -- e.g. a fixed inhibitory winner-take-all block stays
+        bit-identical while the feed-forward block learns.
+      backend / plasticity_backend: "jnp" or "pallas"; the plasticity
+        backend defaults to following ``backend``.
+
+    Returns:
+      ``((final_state, final_plast_state, final_w), raster)``.
+    """
+    from repro.plasticity import rules as plasticity_rules
+
+    if state.delay_buf.shape[-2] != 1:
+        raise ValueError(
+            "learning_rollout requires max_delay == 1 (pair STDP reads the "
+            "previous tick's spikes as the presynaptic events)")
+    if plasticity_backend is None:
+        plasticity_backend = backend
+    if rewards is None:
+        rewards = jnp.zeros((n_ticks,), jnp.float32)
+    if plastic_c is None:
+        plastic_c = params.c
+
+    def body(carry, xs):
+        st, pst, w = carry
+        ext, reward = xs
+        p = dataclasses.replace(params, w=w)
+        s_pre = st.lif.y
+        st2 = step(st, p, ext, mode=mode, backend=backend)
+        pst2, w2 = plasticity_rules.plasticity_step(
+            pst, s_pre, st2.lif.y, w, plastic_c, plasticity, reward,
+            backend=plasticity_backend)
+        return (st2, pst2, w2), st2.lif.y
+
+    carry0 = (state, plast_state, params.w)
+    if ext_seq is None:
+        return jax.lax.scan(
+            lambda c, r: body(c, (None, r)), carry0, rewards, length=n_ticks)
+    return jax.lax.scan(body, carry0, (ext_seq, rewards))
+
+
 def forward_layered(
     params: SNNParams,
     spikes_in: jax.Array,

@@ -1,0 +1,13 @@
+"""Version shims for the Pallas TPU API surface.
+
+jaxlib renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(and back-compat aliases differ across the versions this repo meets in
+CI vs the baked container).  Every kernel imports the name from here so
+the sweep in tests/test_kernels.py runs on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 DEFAULT_BLOCK_B = 128
 DEFAULT_BLOCK_N = 128
 DEFAULT_BLOCK_K = 512
@@ -165,7 +167,7 @@ def fused_lif_step(
             jax.ShapeDtypeStruct((B, N), s.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((block_b, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

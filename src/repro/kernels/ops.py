@@ -16,6 +16,7 @@ import numpy as np
 from repro.core.lif import LIFParams, LIFState
 from repro.kernels import lif_step as _lif_kernel
 from repro.kernels import spike_matmul as _sm_kernel
+from repro.kernels import stdp_update as _stdp_kernel
 from repro.kernels import ref as _ref
 
 
@@ -149,6 +150,63 @@ def fused_lif_step(
     )
     unflat = lambda a: a.reshape(batch_shape + (n,))
     return LIFState(v=unflat(v), r=unflat(r), y=unflat(y))
+
+
+def fused_stdp_step(
+    s_pre: jax.Array,
+    x_pre: jax.Array,
+    s_post: jax.Array,
+    x_post: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    elig: jax.Array,
+    reward: jax.Array,
+    *,
+    rule: str,
+    a_plus: float,
+    a_minus: float,
+    decay_pre: float,
+    decay_post: float,
+    decay_elig: float,
+    lr_reward: float,
+    w_min: float,
+    w_max: float,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Padded, backend-selected fused learning tick; see kernel docstring.
+
+    The state<->array bridge (batch flattening, PlasticityState rebuild)
+    lives in ``repro.plasticity.rules.plasticity_step`` -- this is the
+    array-level entry point it and the tests share.  Zero-padding is
+    exact here: padded batch rows contribute zero to both outer products,
+    padded synapses carry C == 0 (so dw == 0 there), and every padded
+    region is sliced away before returning.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, K = s_pre.shape
+    N = s_post.shape[1]
+    bb = _pick_block(B, _stdp_kernel.DEFAULT_BLOCK_B, 8)
+    bk = _pick_block(K, _stdp_kernel.DEFAULT_BLOCK_K, 128)
+    bn = _pick_block(N, _stdp_kernel.DEFAULT_BLOCK_N, 128)
+
+    pad_bk = lambda a: _pad_to(_pad_to(a, 0, bb), 1, bk)
+    pad_bn = lambda a: _pad_to(_pad_to(a, 0, bb), 1, bn)
+    pad_kn = lambda a: _pad_to(_pad_to(a, 0, bk), 1, bn)
+
+    w_new, elig_new, x_pre_new, x_post_new = _stdp_kernel.fused_stdp_step(
+        pad_bk(s_pre), pad_bk(x_pre), pad_bn(s_post), pad_bn(x_post),
+        pad_kn(w), pad_kn(c), pad_kn(elig),
+        jnp.asarray(reward, jnp.float32),
+        rule=rule, a_plus=a_plus, a_minus=a_minus,
+        decay_pre=decay_pre, decay_post=decay_post, decay_elig=decay_elig,
+        lr_reward=lr_reward, w_min=w_min, w_max=w_max,
+        block_b=bb, block_k=bk, block_n=bn, interpret=interpret,
+    )
+    return (
+        w_new[:K, :N], elig_new[:K, :N],
+        x_pre_new[:B, :K], x_post_new[:B, :N],
+    )
 
 
 def event_spike_matmul(

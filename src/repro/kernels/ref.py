@@ -82,3 +82,66 @@ def event_spike_matmul_ref(
     provided at most ``k_active`` presynaptic neurons spike per batch row
     (the beyond-paper sparse-dispatch path gathers only active fan-outs)."""
     return spike_matmul_ref(s, w, c)
+
+
+class STDPStepOut(NamedTuple):
+    w: jax.Array       # (K, N) updated weights, clipped to [w_min, w_max]
+    elig: jax.Array    # (K, N) eligibility (decayed+accumulated iff rstdp)
+    x_pre: jax.Array   # (B, K) updated presynaptic traces
+    x_post: jax.Array  # (B, N) updated postsynaptic traces
+
+
+def fused_stdp_step_ref(
+    s_pre: jax.Array,
+    x_pre: jax.Array,
+    s_post: jax.Array,
+    x_post: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    elig: jax.Array,
+    reward: jax.Array,
+    *,
+    rule: str,
+    a_plus: float,
+    a_minus: float,
+    decay_pre: float,
+    decay_post: float,
+    decay_elig: float,
+    lr_reward: float,
+    w_min: float,
+    w_max: float,
+) -> STDPStepOut:
+    """Fused learning tick: trace decay + pair-STDP outer-product update.
+
+    The array-level oracle for :mod:`repro.kernels.stdp_update`, and the
+    exact semantics of :func:`repro.plasticity.stdp.stdp_step_ref` once the
+    dataclass plumbing is stripped.  Shapes: ``s_pre, x_pre``: (B, K);
+    ``s_post, x_post``: (B, N); ``w, c, elig``: (K, N); ``reward``: scalar.
+
+    LTP pairs the *updated* pre trace (incl. this tick's pre spikes) with
+    this tick's post spikes; LTD pairs this tick's pre spikes with the
+    *updated* post trace.  Batch contributions sum.
+    """
+    f32 = jnp.float32
+    x_pre_new = decay_pre * x_pre.astype(f32) + s_pre.astype(f32)
+    x_post_new = decay_post * x_post.astype(f32) + s_post.astype(f32)
+    ltp = jnp.dot(x_pre_new.T, s_post.astype(f32))
+    ltd = jnp.dot(s_pre.astype(f32).T, x_post_new)
+    cf = c.astype(f32)
+    dw = (a_plus * ltp - a_minus * ltd) * cf
+    wf = w.astype(f32)
+    if rule == "rstdp":
+        elig_new = decay_elig * elig.astype(f32) + dw
+        w_new = wf + lr_reward * jnp.asarray(reward, f32) * elig_new
+    else:
+        elig_new = elig.astype(f32)
+        w_new = wf + dw
+    # Non-plastic synapses (c == 0) come back bit-identical, not clipped:
+    # a frozen (e.g. negative inhibitory) block may share the matrix.
+    w_new = jnp.where(cf > 0, jnp.clip(w_new, w_min, w_max), wf)
+    return STDPStepOut(
+        w=w_new.astype(w.dtype),
+        elig=elig_new.astype(elig.dtype),
+        x_pre=x_pre_new.astype(x_pre.dtype),
+        x_post=x_post_new.astype(x_post.dtype),
+    )

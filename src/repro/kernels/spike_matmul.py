@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 DEFAULT_BLOCK_B = 128
 DEFAULT_BLOCK_N = 128
 DEFAULT_BLOCK_K = 512
@@ -74,7 +76,7 @@ def spike_matmul(
         out_specs=pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((block_b, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -124,7 +124,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
             if hasattr(ma, k)
         }
         print("memory_analysis:", mem)
-        ca = compiled.cost_analysis() or {}
+        ca = hlo_cost.cost_dict(compiled.cost_analysis())
         print("cost_analysis: flops=%s bytes=%s" % (
             ca.get("flops"), ca.get("bytes accessed")))
 

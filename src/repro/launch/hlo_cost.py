@@ -46,6 +46,23 @@ _HEADER_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
 Shape = Tuple[str, Tuple[int, ...]]
 
 
+def cost_dict(cost_analysis) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jaxlib versions.
+
+    Older jaxlib returns a flat dict; newer returns a one-element list of
+    dicts (one per program).  Returns {} for None/empty so callers can
+    ``.get()`` unconditionally.
+    """
+    if cost_analysis is None:
+        return {}
+    if isinstance(cost_analysis, dict):
+        return cost_analysis
+    if isinstance(cost_analysis, (list, tuple)):
+        return cost_analysis[0] if cost_analysis and isinstance(
+            cost_analysis[0], dict) else {}
+    return {}
+
+
 def _nbytes(sh: Shape) -> int:
     dt, dims = sh
     return _DTYPE_BYTES.get(dt, 4) * (math.prod(dims) if dims else 1)

@@ -1,0 +1,35 @@
+"""On-device plasticity: trace-based STDP / R-STDP inside the tick loop.
+
+The paper's processor is inference-only -- weights are trained off-chip
+and streamed in over the UART.  This subsystem closes the loop the way
+NeuroCoreX (arXiv:2506.14138) does for the same architecture family:
+pair-based STDP with pre/post eligibility traces co-located with the
+neuron datapath, plus a reward-modulated variant (R-STDP) for on-device
+supervised readouts.  Weights live on the register bank's u8 grid
+([0, 255]) the whole time, so a *learned* network serializes back through
+:class:`repro.core.registers.RegisterBank` / UART byte-exactly -- the
+paper's "no re-synthesis" reconfiguration story run in reverse
+(device -> host weight readback).
+
+Layering:
+
+* :mod:`repro.plasticity.traces`  -- exponential spike-trace arithmetic.
+* :mod:`repro.plasticity.stdp`    -- ``PlasticityParams`` / ``PlasticityState``
+  and the pure-jnp pair-STDP weight update (the reference semantics).
+* :mod:`repro.plasticity.rules`   -- rule dispatch (stdp | rstdp) and the
+  backend switch (jnp reference vs the fused Pallas kernel in
+  :mod:`repro.kernels.stdp_update`).
+* ``repro.core.network.learning_rollout`` -- the scan whose carry includes
+  the mutable weight matrix.
+
+DESIGN.md §7 documents the datapath restatement.
+"""
+from repro.plasticity.stdp import (  # noqa: F401
+    PlasticityParams,
+    PlasticityState,
+    apply_reward,
+    quantize_weights,
+    weights_to_bank,
+    weights_from_bank,
+)
+from repro.plasticity.rules import plasticity_step  # noqa: F401

@@ -1,0 +1,74 @@
+"""Rule dispatch: one entry point for a learning tick, any backend.
+
+``plasticity_step`` is what the network scan calls.  It owns the single
+state<->array bridge (flatten batch dims, default the reward, expand the
+hyper-parameters, rebuild :class:`PlasticityState`) and routes the
+array-level work to either the pure-jnp oracle
+(:func:`repro.kernels.ref.fused_stdp_step_ref`) or the fused Pallas
+kernel (:func:`repro.kernels.ops.fused_stdp_step`), which computes the
+trace decay and the batched outer-product weight update in one VMEM pass
+(interpret mode on CPU is correctness-identical to the TPU lowering;
+tests/test_plasticity.py pins the equivalence).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.plasticity.stdp import PlasticityParams, PlasticityState
+
+
+def _hyper_kwargs(params: PlasticityParams) -> dict:
+    """The array-level hyper-parameter expansion both backends share."""
+    return dict(
+        rule=params.rule, a_plus=params.a_plus, a_minus=params.a_minus,
+        decay_pre=params.decay_pre, decay_post=params.decay_post,
+        decay_elig=params.decay_elig, lr_reward=params.lr_reward,
+        w_min=params.w_min, w_max=params.w_max)
+
+
+def plasticity_step(
+    state: PlasticityState,
+    s_pre: jax.Array,
+    s_post: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    params: PlasticityParams,
+    reward: Optional[jax.Array] = None,
+    *,
+    backend: str = "jnp",
+    interpret: Optional[bool] = None,
+) -> Tuple[PlasticityState, jax.Array]:
+    """One learning tick: update traces, eligibility, and weights.
+
+    Args mirror :func:`repro.plasticity.stdp.stdp_step_ref`; ``backend``
+    selects ``"jnp"`` (reference) or ``"pallas"`` (fused kernel, with
+    ``interpret`` plumbed through for CPU execution).
+    """
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown plasticity backend {backend!r}")
+    batch_shape = s_pre.shape[:-1]
+    flat = lambda a: a.reshape((-1, a.shape[-1]))
+    r = jnp.zeros((), jnp.float32) if reward is None else jnp.asarray(
+        reward, jnp.float32)
+    args = (flat(s_pre), flat(state.x_pre), flat(s_post), flat(state.x_post),
+            w, c, state.elig, r)
+    if backend == "jnp":
+        from repro.kernels.ref import fused_stdp_step_ref
+
+        out = fused_stdp_step_ref(*args, **_hyper_kwargs(params))
+    else:
+        from repro.kernels import ops  # local import; CPU tests use jnp
+
+        out = ops.fused_stdp_step(
+            *args, interpret=interpret, **_hyper_kwargs(params))
+    w_new, elig, x_pre, x_post = out
+    return (
+        PlasticityState(
+            x_pre=x_pre.reshape(batch_shape + s_pre.shape[-1:]),
+            x_post=x_post.reshape(batch_shape + s_post.shape[-1:]),
+            elig=elig),
+        w_new,
+    )

@@ -1,0 +1,237 @@
+"""Pair-based STDP / R-STDP core API: params, state, reference update.
+
+Semantics (one network tick, matching ``repro.core.network.step``):
+
+    x_pre'  = decay_pre  * x_pre  + s_pre          (trace incl. this tick)
+    x_post' = decay_post * x_post + s_post
+    dw[i,j] = a_plus  * sum_b x_pre'[b,i] * s_post[b,j]      (LTP)
+            - a_minus * sum_b s_pre[b,i]  * x_post'[b,j]     (LTD)
+
+``s_pre`` are the spikes *arriving* at this tick (the presynaptic events
+the mux fabric routed in), ``s_post`` the spikes emitted by the updated
+neurons.  A pre spike that precedes a post spike is captured by ``x_pre``
+at post time (causal potentiation); a post spike that precedes a pre
+spike is captured by ``x_post`` at pre-arrival time (acausal depression).
+Coincident pre/post spikes hit both terms and contribute
+``a_plus - a_minus`` net -- document-once convention, shared bit-for-bit
+by the jnp reference here, the oracle in :mod:`repro.kernels.ref`, and
+the fused Pallas kernel in :mod:`repro.kernels.stdp_update`.
+
+Batch dims are *summed* into the shared weight matrix (the hardware has
+one synapse array; a batch is a sum of per-sample updates -- scale
+``a_plus/a_minus`` by ``1/B`` for a mean).
+
+Weight updates are masked by the connection list ``C`` (a mux that routes
+a zero cannot learn) and clipped to the register bank's u8 domain
+``[w_min, w_max] ⊆ [0, 255]``, so the learned matrix rounds onto the wire
+format losslessly (:func:`weights_to_bank` / :func:`weights_from_bank`).
+
+Rules:
+
+* ``"stdp"``  -- apply ``dw`` immediately (unsupervised Hebbian learning).
+* ``"rstdp"`` -- accumulate ``dw`` into a per-synapse eligibility trace
+  ``elig' = decay_elig * elig + dw`` and apply
+  ``w' = w + lr_reward * reward * elig'`` -- a scalar dopamine signal
+  gates, scales, and signs the update (three-factor rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.plasticity import traces
+
+RULES = ("stdp", "rstdp")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlasticityParams:
+    """Learning hyper-parameters.
+
+    A plain (non-pytree) dataclass: these are compile-time constants like
+    the LIF ``mode`` string, baked into the jitted tick -- the hardware
+    analogue is a synthesis-time learning-engine configuration, while the
+    *weights* stay runtime registers.
+
+    Attributes:
+      rule: ``"stdp"`` or ``"rstdp"``.
+      a_plus: LTP amplitude per (pre-trace, post-spike) pairing.
+      a_minus: LTD amplitude per (pre-spike, post-trace) pairing.
+      decay_pre: per-tick presynaptic trace decay ``exp(-1/tau_pre)``.
+      decay_post: per-tick postsynaptic trace decay.
+      decay_elig: per-tick eligibility decay (R-STDP only).
+      lr_reward: reward learning rate (R-STDP only).
+      w_min, w_max: hard weight bounds, the register bank's u8 domain.
+    """
+
+    rule: str = "stdp"
+    a_plus: float = 1.0
+    a_minus: float = 1.0
+    decay_pre: float = 0.7165313106
+    decay_post: float = 0.7165313106
+    decay_elig: float = 0.9048374180
+    lr_reward: float = 1.0
+    w_min: float = 0.0
+    w_max: float = 255.0
+
+    def __post_init__(self):
+        if self.rule not in RULES:
+            raise ValueError(f"unknown plasticity rule {self.rule!r}; have {RULES}")
+        if not (0.0 <= self.w_min < self.w_max <= 255.0):
+            raise ValueError(
+                f"[w_min, w_max]=[{self.w_min}, {self.w_max}] must lie in the "
+                f"u8 register domain [0, 255]")
+
+    @staticmethod
+    def make(
+        rule: str = "stdp",
+        *,
+        tau_pre: float = 3.0,
+        tau_post: float = 3.0,
+        tau_elig: float = 10.0,
+        a_plus: float = 1.0,
+        a_minus: float = 1.0,
+        lr_reward: float = 1.0,
+        w_min: float = 0.0,
+        w_max: float = 255.0,
+    ) -> "PlasticityParams":
+        """Construct from time constants in ticks (the usual papers' units)."""
+        return PlasticityParams(
+            rule=rule,
+            a_plus=a_plus,
+            a_minus=a_minus,
+            decay_pre=traces.decay_from_tau(tau_pre),
+            decay_post=traces.decay_from_tau(tau_post),
+            decay_elig=traces.decay_from_tau(tau_elig),
+            lr_reward=lr_reward,
+            w_min=w_min,
+            w_max=w_max,
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PlasticityState:
+    """Learning state carried through the tick scan.
+
+    Attributes:
+      x_pre: presynaptic traces, shape ``(..., n_pre)`` (batch dims match
+        the network state).
+      x_post: postsynaptic traces, shape ``(..., n_post)``.
+      elig: per-synapse eligibility, shape ``(n_pre, n_post)`` -- shared
+        across the batch like the weights it gates (zeros and unused for
+        ``rule="stdp"``).
+    """
+
+    x_pre: jax.Array
+    x_post: jax.Array
+    elig: jax.Array
+
+    @staticmethod
+    def zeros(
+        batch_shape,
+        n_pre: int,
+        n_post: Optional[int] = None,
+        dtype=jnp.float32,
+    ) -> "PlasticityState":
+        n_post = n_pre if n_post is None else n_post
+        shape = tuple(batch_shape)
+        return PlasticityState(
+            x_pre=jnp.zeros(shape + (n_pre,), dtype=dtype),
+            x_post=jnp.zeros(shape + (n_post,), dtype=dtype),
+            elig=jnp.zeros((n_pre, n_post), dtype=dtype),
+        )
+
+
+def stdp_step_ref(
+    state: PlasticityState,
+    s_pre: jax.Array,
+    s_post: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    params: PlasticityParams,
+    reward: Optional[jax.Array] = None,
+) -> Tuple[PlasticityState, jax.Array]:
+    """One learning tick, pure-jnp reference semantics.
+
+    Args:
+      s_pre: spikes arriving this tick, ``(..., n_pre)``.
+      s_post: spikes emitted this tick, ``(..., n_post)``.
+      w: weights ``(n_pre, n_post)``; plastic entries live on the u8 grid.
+      c: plastic mask ``(n_pre, n_post)`` in {0, 1} -- usually the
+        connection list; pass a sub-mask to freeze part of the fabric
+        (e.g. a fixed inhibitory winner-take-all block).  Synapses with
+        ``c == 0`` are returned bit-identical (not even clipped).
+      reward: scalar dopamine signal (R-STDP; ignored for ``"stdp"``).
+
+    Returns:
+      ``(new_state, new_weights)``.
+    """
+    # One bridge, one source of truth: the dispatcher in rules.py routes
+    # to the array-level oracle (kernels/ref.py) for the jnp backend.
+    from repro.plasticity.rules import plasticity_step
+
+    return plasticity_step(
+        state, s_pre, s_post, w, c, params, reward, backend="jnp")
+
+
+def apply_reward(
+    w: jax.Array,
+    elig: jax.Array,
+    reward,
+    params: PlasticityParams,
+    c: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Episode-level R-STDP: apply a terminal reward to banked eligibility.
+
+    The common deployment runs the rollout with ``reward=0`` (eligibility
+    accumulates, weights stay put) and applies the scalar outcome once the
+    episode's prediction is known -- exactly
+    ``w' = clip(w + lr * r * elig)``; equivalent to passing a rewards
+    sequence that is zero except at the final tick.
+    """
+    wf = w.astype(jnp.float32)
+    upd = params.lr_reward * jnp.asarray(reward, jnp.float32) * elig.astype(
+        jnp.float32)
+    w_new = jnp.clip(wf + upd, params.w_min, params.w_max)
+    if c is not None:
+        w_new = jnp.where(c.astype(jnp.float32) > 0, w_new, wf)
+    return w_new.astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# register-bank readback: the reconfiguration story in reverse
+
+
+def quantize_weights(w: jax.Array) -> np.ndarray:
+    """Round learned weights (already clipped to [0, 255]) onto the u8 grid."""
+    wq = np.rint(np.asarray(w, np.float64))
+    if wq.min() < 0 or wq.max() > 255:
+        raise ValueError(
+            f"weights [{wq.min()}, {wq.max()}] outside the u8 register domain "
+            "-- was the rollout run with w_min/w_max inside [0, 255]?")
+    return wq.astype(np.uint8)
+
+
+def weights_to_bank(bank, w: jax.Array) -> np.ndarray:
+    """Write a learned ``(n, n)`` weight matrix into a PER_SYNAPSE bank.
+
+    Returns the u8 matrix actually stored (the round-tripped truth the
+    caller should keep using, so host and device stay bit-identical).
+    """
+    from repro.core.registers import WeightLayout
+
+    if bank.weight_layout != WeightLayout.PER_SYNAPSE:
+        raise ValueError("learned weights need WeightLayout.PER_SYNAPSE")
+    wq = quantize_weights(w)
+    bank.set_weights(wq)
+    return wq
+
+
+def weights_from_bank(bank, dtype=jnp.float32) -> jax.Array:
+    """Read the device's u8 weights back to the learning (float) domain."""
+    return jnp.asarray(bank.weights, dtype)

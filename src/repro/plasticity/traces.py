@@ -1,0 +1,47 @@
+"""Exponential spike traces -- the plasticity subsystem's state variables.
+
+A trace ``x`` low-pass filters a spike train: every tick it decays by a
+constant factor and increments by the tick's spikes,
+
+    x[k+1] = decay * x[k] + s[k+1],        decay = exp(-1 / tau).
+
+On the FPGA this is one shift-and-add per neuron per tick (NeuroCoreX
+realizes the same filter with a power-of-two decay); here it is one fused
+multiply-add in VREGs, either in the jnp reference or inside the Pallas
+STDP kernel so the trace never makes an extra HBM round-trip.
+
+Traces are carried per *neuron*, not per synapse: pair-based STDP needs
+only the presynaptic trace ``x_pre`` (potentiation) and postsynaptic
+trace ``x_post`` (depression), each shape ``(..., n)``.  The per-synapse
+eligibility matrix used by R-STDP lives in
+:class:`repro.plasticity.stdp.PlasticityState` instead.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decay_from_tau(tau: float) -> float:
+    """Per-tick decay factor ``exp(-1/tau)`` for a time constant in ticks."""
+    if tau <= 0:
+        raise ValueError(f"tau must be positive, got {tau}")
+    return math.exp(-1.0 / tau)
+
+
+def trace_step(x: jax.Array, spikes: jax.Array, decay: float) -> jax.Array:
+    """One tick of the exponential trace filter (decay *then* accumulate).
+
+    The returned trace already includes this tick's spikes -- the
+    convention every STDP term in :mod:`repro.plasticity.stdp` is written
+    against (a pre and post spike in the *same* tick see each other).
+    """
+    return decay * x + spikes.astype(x.dtype)
+
+
+def trace_steady_state(rate: float, decay: float) -> float:
+    """Fixed point of the filter under a constant spike rate (diagnostics:
+    bounds the trace magnitude entering the weight update)."""
+    return rate / (1.0 - decay)

@@ -1,4 +1,8 @@
 """Spike encoders/decoders + u8 quantization."""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="tier-1 property tests need the 'test' extra")
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np

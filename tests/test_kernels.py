@@ -2,11 +2,14 @@
 
 Kernels run in interpret mode on CPU (same kernel body the TPU executes).
 """
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="tier-1 property tests need the 'test' extra")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.kernels import ops

@@ -1,10 +1,12 @@
 """LIF dynamics unit + property tests (paper Eq. 1-5)."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="tier-1 property tests need the 'test' extra")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core.lif import LIFParams, LIFState, lif_step

@@ -1,9 +1,12 @@
 """SNN network semantics: propagation, delays, reconfiguration, surrogate."""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="tier-1 property tests need the 'test' extra")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import connectivity

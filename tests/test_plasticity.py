@@ -1,0 +1,340 @@
+"""Plasticity subsystem: fused kernel vs oracle, masking, u8 round-trip.
+
+The deterministic sweep tests always run; the hypothesis property tests
+ride along when the 'test' extra is installed (they skip, not fail, when
+it is not -- unlike the tier-1 modules this file must stay collectable
+everywhere, since it is the only coverage of the new subsystem).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import connectivity
+from repro.core.lif import LIFParams
+from repro.core.network import SNNParams, SNNState, learning_rollout, rollout
+from repro.core.registers import RegisterBank, WeightLayout
+from repro.kernels import ops
+from repro.kernels.ref import fused_stdp_step_ref
+from repro.plasticity import (
+    PlasticityParams, PlasticityState, apply_reward, plasticity_step,
+    quantize_weights, weights_from_bank, weights_to_bank,
+)
+from repro.plasticity.traces import decay_from_tau, trace_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+SHAPES = [
+    (1, 8, 8),        # minimal
+    (4, 74, 74),      # the paper's MNIST system size
+    (3, 130, 70),     # ragged, forces padding on every axis
+    (8, 128, 128),    # exactly block-aligned
+]
+HYPERS = dict(a_plus=0.8, a_minus=0.3, decay_pre=0.7, decay_post=0.6,
+              decay_elig=0.9, lr_reward=0.4, w_min=0.0, w_max=255.0)
+
+
+def _case(rng, b, k, n, spike_rate=0.3):
+    return dict(
+        s_pre=jnp.asarray((rng.random((b, k)) < spike_rate), jnp.float32),
+        x_pre=jnp.asarray(rng.random((b, k)), jnp.float32),
+        s_post=jnp.asarray((rng.random((b, n)) < spike_rate), jnp.float32),
+        x_post=jnp.asarray(rng.random((b, n)), jnp.float32),
+        w=jnp.asarray(rng.uniform(0, 255, (k, n)), jnp.float32),
+        c=jnp.asarray((rng.random((k, n)) < 0.5), jnp.float32),
+        elig=jnp.asarray(rng.normal(size=(k, n)), jnp.float32),
+    )
+
+
+class TestFusedKernelVsOracle:
+    @pytest.mark.parametrize("b,k,n", SHAPES)
+    @pytest.mark.parametrize("rule", ["stdp", "rstdp"])
+    def test_interpret_matches_ref(self, b, k, n, rule):
+        """Pallas interpret mode == jnp oracle (same kernel body as TPU)."""
+        rng = np.random.default_rng(b * 1000 + k + n)
+        case = _case(rng, b, k, n)
+        r = jnp.asarray(0.5)
+        got = ops.fused_stdp_step(
+            case["s_pre"], case["x_pre"], case["s_post"], case["x_post"],
+            case["w"], case["c"], case["elig"], r, rule=rule, **HYPERS)
+        want = fused_stdp_step_ref(
+            case["s_pre"], case["x_pre"], case["s_post"], case["x_post"],
+            case["w"], case["c"], case["elig"], r, rule=rule, **HYPERS)
+        for g, w_, name in zip(got, want, ("w", "elig", "x_pre", "x_post")):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(w_), rtol=1e-6, atol=1e-6,
+                err_msg=f"{rule}/{name} b={b} k={k} n={n}")
+
+    @pytest.mark.parametrize("rule", ["stdp", "rstdp"])
+    def test_unmasked_synapses_bit_identical(self, rule):
+        """Where C == 0 the weight comes back bit-for-bit unchanged -- not
+        even clipped (a frozen off-grid inhibitory block must survive)."""
+        rng = np.random.default_rng(0)
+        case = _case(rng, 4, 74, 74)
+        # plant out-of-[w_min, w_max] values on masked synapses
+        w = np.array(case["w"])
+        w[np.asarray(case["c"]) == 0] = -127.0
+        case["w"] = jnp.asarray(w)
+        for backend in ("jnp", "pallas"):
+            state = PlasticityState(
+                x_pre=case["x_pre"], x_post=case["x_post"], elig=case["elig"])
+            pp = PlasticityParams(rule=rule, **{
+                k: v for k, v in HYPERS.items()})
+            st2, w2 = plasticity_step(
+                state, case["s_pre"], case["s_post"], case["w"], case["c"],
+                pp, jnp.asarray(0.5), backend=backend)
+            mask = np.asarray(case["c"]) == 0
+            np.testing.assert_array_equal(
+                np.asarray(w2)[mask], np.asarray(case["w"])[mask],
+                err_msg=f"{backend}/{rule}")
+            assert np.asarray(w2)[~mask].min() >= HYPERS["w_min"]
+            assert np.asarray(w2)[~mask].max() <= HYPERS["w_max"]
+
+    def test_state_level_backends_agree(self):
+        rng = np.random.default_rng(1)
+        case = _case(rng, 2, 40, 40)
+        state = PlasticityState(
+            x_pre=case["x_pre"], x_post=case["x_post"], elig=case["elig"])
+        pp = PlasticityParams.make("rstdp", tau_pre=2.0, tau_post=3.0)
+        outs = {}
+        for backend in ("jnp", "pallas"):
+            outs[backend] = plasticity_step(
+                state, case["s_pre"], case["s_post"], case["w"], case["c"],
+                pp, jnp.asarray(-1.0), backend=backend)
+        for a, b in zip(jax.tree.leaves(outs["jnp"]),
+                        jax.tree.leaves(outs["pallas"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
+
+class TestRuleSemantics:
+    def test_trace_decay_law(self):
+        x = jnp.asarray([1.0, 0.0])
+        d = decay_from_tau(2.0)
+        x1 = trace_step(x, jnp.zeros(2), d)
+        np.testing.assert_allclose(np.asarray(x1), [d, 0.0], rtol=1e-6)
+        x2 = trace_step(x1, jnp.ones(2), d)
+        np.testing.assert_allclose(np.asarray(x2), [d * d + 1, 1.0], rtol=1e-6)
+
+    def test_stdp_causal_potentiation_sign(self):
+        """pre spike then post spike => that synapse potentiates."""
+        pp = PlasticityParams.make("stdp", a_plus=1.0, a_minus=1.0)
+        state = PlasticityState.zeros((), 2, 2)
+        w = jnp.full((2, 2), 10.0)
+        c = jnp.ones((2, 2))
+        # tick 1: pre 0 spikes, no post
+        state, w = plasticity_step(
+            state, jnp.asarray([1.0, 0.0]), jnp.zeros(2), w, c, pp)
+        # tick 2: post 1 spikes, no pre
+        _, w = plasticity_step(
+            state, jnp.zeros(2), jnp.asarray([0.0, 1.0]), w, c, pp)
+        w = np.asarray(w)
+        assert w[0, 1] > 10.0          # pre-0 -> post-1 causal pair: LTP
+        assert w[1, 0] == 10.0         # nothing happened on that synapse
+
+    def test_stdp_acausal_depression_sign(self):
+        """post spike then pre spike => that synapse depresses."""
+        pp = PlasticityParams.make("stdp", a_plus=1.0, a_minus=1.0)
+        state = PlasticityState.zeros((), 2, 2)
+        w = jnp.full((2, 2), 10.0)
+        c = jnp.ones((2, 2))
+        state, w = plasticity_step(
+            state, jnp.zeros(2), jnp.asarray([0.0, 1.0]), w, c, pp)
+        _, w = plasticity_step(
+            state, jnp.asarray([1.0, 0.0]), jnp.zeros(2), w, c, pp)
+        assert np.asarray(w)[0, 1] < 10.0   # acausal pair: LTD
+
+    def test_rstdp_zero_reward_banks_eligibility(self):
+        # asymmetric amplitudes: with a_plus == a_minus and zeroed traces,
+        # one tick's LTP/LTD cancel exactly (coincident-pair convention)
+        pp = PlasticityParams.make("rstdp", a_plus=1.0, a_minus=0.25)
+        rng = np.random.default_rng(2)
+        case = _case(rng, 2, 16, 16)
+        state = PlasticityState.zeros((2,), 16)
+        st2, w2 = plasticity_step(
+            state, case["s_pre"], case["s_post"], case["w"], case["c"], pp)
+        np.testing.assert_array_equal(np.asarray(w2), np.asarray(case["w"]))
+        assert float(jnp.abs(st2.elig).max()) > 0
+
+    def test_rstdp_reward_sign_flips_update(self):
+        pp = PlasticityParams.make("rstdp", lr_reward=0.5)
+        w = jnp.full((4, 4), 100.0)
+        elig = jnp.asarray(np.random.default_rng(3).normal(size=(4, 4)),
+                           jnp.float32)
+        up = np.asarray(apply_reward(w, elig, 1.0, pp))
+        down = np.asarray(apply_reward(w, elig, -1.0, pp))
+        np.testing.assert_allclose(up - 100.0, -(down - 100.0), rtol=1e-5)
+
+    def test_params_validation(self):
+        with pytest.raises(ValueError):
+            PlasticityParams(rule="hebbian")
+        with pytest.raises(ValueError):
+            PlasticityParams(w_min=-1.0)
+        with pytest.raises(ValueError):
+            PlasticityParams(w_max=300.0)
+
+
+class TestLearningRollout:
+    def _params(self, n, rng, v_th=1.5):
+        c = connectivity.layered([n // 2, n - n // 2]).astype(np.float32)
+        return SNNParams(
+            w=jnp.asarray(rng.uniform(1, 3, (n, n)), jnp.float32),
+            c=jnp.asarray(c),
+            w_in=jnp.eye(n, dtype=jnp.float32) * 2.0,
+            lif=LIFParams.make(n, v_th=v_th))
+
+    def test_zero_amplitude_degenerates_to_rollout(self):
+        rng = np.random.default_rng(4)
+        n, ticks, b = 12, 6, 2
+        params = self._params(n, rng)
+        ext = jnp.asarray(
+            np.tile((rng.random((b, n)) < 0.5) * (np.arange(n) < n // 2),
+                    (ticks, 1, 1)).astype(np.float32))
+        state = SNNState.zeros((b,), n)
+        pstate = PlasticityState.zeros((b,), n)
+        pp = PlasticityParams.make(a_plus=0.0, a_minus=0.0)
+        (fin, _, w_fin), raster_l = learning_rollout(
+            params, state, pstate, ext, ticks, plasticity=pp)
+        fin_ref, raster = rollout(params, state, ext, ticks)
+        np.testing.assert_array_equal(np.asarray(raster_l), np.asarray(raster))
+        np.testing.assert_array_equal(np.asarray(w_fin), np.asarray(params.w))
+        np.testing.assert_array_equal(np.asarray(fin.lif.v),
+                                      np.asarray(fin_ref.lif.v))
+
+    def test_updates_respect_connection_list(self):
+        rng = np.random.default_rng(5)
+        n, ticks, b = 12, 8, 2
+        params = self._params(n, rng, v_th=1.0)
+        ext = jnp.asarray(
+            np.tile((rng.random((b, n)) < 0.7) * (np.arange(n) < n // 2),
+                    (ticks, 1, 1)).astype(np.float32))
+        pp = PlasticityParams.make(a_plus=0.5, a_minus=0.2)
+        (_, _, w_fin), _ = learning_rollout(
+            params, SNNState.zeros((b,), n), PlasticityState.zeros((b,), n),
+            ext, ticks, plasticity=pp)
+        dw = np.asarray(w_fin - params.w)
+        off = np.asarray(params.c) == 0
+        np.testing.assert_array_equal(dw[off], 0.0)
+        assert np.abs(dw).max() > 0     # and something did learn
+
+    def test_jnp_and_pallas_backends_agree(self):
+        rng = np.random.default_rng(6)
+        n, ticks, b = 10, 5, 2
+        params = self._params(n, rng, v_th=1.0)
+        ext = jnp.asarray(
+            np.tile((rng.random((b, n)) < 0.7) * (np.arange(n) < n // 2),
+                    (ticks, 1, 1)).astype(np.float32))
+        pp = PlasticityParams.make(a_plus=0.5, a_minus=0.2)
+        outs = {}
+        for pb in ("jnp", "pallas"):
+            outs[pb] = learning_rollout(
+                params, SNNState.zeros((b,), n),
+                PlasticityState.zeros((b,), n), ext, ticks, plasticity=pp,
+                plasticity_backend=pb)
+        (c_j, r_j), (c_p, r_p) = outs["jnp"], outs["pallas"]
+        np.testing.assert_allclose(np.asarray(r_j), np.asarray(r_p))
+        np.testing.assert_allclose(np.asarray(c_j[2]), np.asarray(c_p[2]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_requires_unit_delay(self):
+        rng = np.random.default_rng(7)
+        n = 8
+        params = self._params(n, rng)
+        state = SNNState.zeros((), n, max_delay=3)
+        with pytest.raises(ValueError, match="max_delay"):
+            learning_rollout(params, state, PlasticityState.zeros((), n),
+                             None, 4, plasticity=PlasticityParams.make())
+
+
+class TestRegisterRoundTrip:
+    def test_learned_weights_roundtrip_per_synapse(self):
+        """STDP-learned weights -> u8 bank -> serialize -> load ->
+        bit-identical registers and identical inference spikes."""
+        rng = np.random.default_rng(8)
+        n, ticks, b = 16, 8, 3
+        c = connectivity.layered([8, 8]).astype(np.float32)
+        params = SNNParams(
+            w=jnp.asarray(rng.uniform(0, 64, (n, n)), jnp.float32),
+            c=jnp.asarray(c),
+            w_in=jnp.eye(n, dtype=jnp.float32) * 2.0,
+            lif=LIFParams.make(n, v_th=40.0))
+        ext = jnp.asarray(
+            np.tile((rng.random((b, n)) < 0.7) * (np.arange(n) < 8),
+                    (ticks, 1, 1)).astype(np.float32))
+        pp = PlasticityParams.make(a_plus=3.0, a_minus=1.0, w_max=255.0)
+        (_, _, w_learned), _ = learning_rollout(
+            params, SNNState.zeros((b,), n), PlasticityState.zeros((b,), n),
+            ext, ticks, plasticity=pp)
+
+        bank = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+        bank.set_connection_list(c.astype(bool))
+        bank.set_thresholds(np.full((n,), 40, np.uint8))
+        w_u8 = weights_to_bank(bank, w_learned)
+
+        bank_dev = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+        bank_dev.load_bytes(bank.serialize())
+        assert bank_dev.serialize() == bank.serialize()
+        np.testing.assert_array_equal(bank_dev.weights, w_u8)
+        np.testing.assert_array_equal(
+            bank_dev.get_connection_list(), bank.get_connection_list())
+
+        def spikes(b_):
+            from repro.core.network import params_from_registers
+            p = params_from_registers(b_)
+            p = dataclasses.replace(p, w_in=jnp.eye(n, dtype=jnp.float32) * 2.0)
+            _, raster = rollout(p, SNNState.zeros((3,), n), ext, ticks)
+            return np.asarray(raster)
+
+        np.testing.assert_array_equal(spikes(bank), spikes(bank_dev))
+        # and the readback path reproduces the quantized learning domain
+        np.testing.assert_array_equal(
+            np.asarray(weights_from_bank(bank_dev)),
+            np.asarray(quantize_weights(w_learned), np.float32))
+
+    def test_quantize_rejects_out_of_domain(self):
+        with pytest.raises(ValueError, match="u8"):
+            quantize_weights(jnp.asarray([[-3.0]]))
+        with pytest.raises(ValueError, match="u8"):
+            quantize_weights(jnp.asarray([[300.0]]))
+
+
+if HAS_HYPOTHESIS:
+
+    class TestProperties:
+        @settings(deadline=None, max_examples=25)
+        @given(st.integers(1, 6), st.integers(1, 90), st.integers(1, 90),
+               st.sampled_from(["stdp", "rstdp"]),
+               st.floats(-2.0, 2.0))
+        def test_kernel_matches_oracle(self, b, k, n, rule, reward):
+            rng = np.random.default_rng(b * 7 + k * 3 + n)
+            case = _case(rng, b, k, n)
+            r = jnp.asarray(reward, jnp.float32)
+            got = ops.fused_stdp_step(
+                case["s_pre"], case["x_pre"], case["s_post"], case["x_post"],
+                case["w"], case["c"], case["elig"], r, rule=rule, **HYPERS)
+            want = fused_stdp_step_ref(
+                case["s_pre"], case["x_pre"], case["s_post"], case["x_post"],
+                case["w"], case["c"], case["elig"], r, rule=rule, **HYPERS)
+            for g, w_ in zip(got, want):
+                np.testing.assert_allclose(np.asarray(g), np.asarray(w_),
+                                           rtol=1e-6, atol=1e-6)
+
+        @settings(deadline=None, max_examples=25)
+        @given(st.floats(0.1, 50.0), st.integers(1, 30))
+        def test_trace_bounded_by_steady_state(self, tau, ticks):
+            from repro.plasticity.traces import trace_steady_state
+            d = decay_from_tau(tau)
+            x = jnp.zeros((1,))
+            for _ in range(ticks):
+                x = trace_step(x, jnp.ones(1), d)
+            assert float(x[0]) <= trace_steady_state(1.0, d) + 1e-4

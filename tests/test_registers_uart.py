@@ -1,7 +1,10 @@
 """Register bank + UART codec: the paper's §II.C/§III.B arithmetic, exactly."""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="tier-1 property tests need the 'test' extra")
 import hypothesis.strategies as st
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from repro.core import connectivity, uart
