@@ -1,0 +1,82 @@
+"""Multi-tenant SNN serving throughput: spikes/s, TTFT, recompiles.
+
+Emits ``BENCH_serve.json`` when run as a script:
+
+  tokens_of_spikes_per_s   rate-decoded output spikes per wall second
+  mean_ttft_s              submit -> first decoded output, averaged
+  recompiles               traces after warmup -- MUST be 0 across tenant
+                           swaps (the "no re-synthesis" property, served)
+
+Tenant churn is the point: every wave swaps different register images
+(heterogeneous topologies, one plastic tenant learning online) through
+the same slots of one compiled program.
+
+  PYTHONPATH=src python benchmarks/bench_serve.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def run(fast: bool = True) -> Dict:
+    from repro.launch.serve import SNNServer, make_demo_requests, make_demo_tenants
+
+    n_max, slots, max_ticks = (24, 4, 12) if fast else (74, 8, 32)
+    n_requests = 16 if fast else 96
+    server = SNNServer(n_max=n_max, slots=slots, max_ticks=max_ticks)
+    names = make_demo_tenants(server, 8, seed=0)
+
+    # Warmup wave (the one and only compile), then the measured run.
+    warm = make_demo_requests(server, names, slots, seed=99)
+    server.serve(warm)
+    compiles_after_warmup = server.compiles
+
+    reqs = make_demo_requests(server, names, n_requests, seed=1)
+    t0 = time.perf_counter()
+    stats = server.serve(reqs)
+    wall = time.perf_counter() - t0
+
+    recompiles = server.compiles - compiles_after_warmup
+    out = {
+        "bench": "multi-tenant SNN serving",
+        "n_max": n_max,
+        "slots": slots,
+        "max_ticks": max_ticks,
+        "n_tenants": stats["n_tenants"],
+        "n_requests": stats["n_requests"],
+        "waves": stats["waves"],
+        "tokens_of_spikes": stats["spikes_out"],
+        "tokens_of_spikes_per_s": round(stats["spikes_out"] / max(1e-9, wall), 1),
+        "slot_ticks_per_s": round(
+            stats["waves"] * max_ticks * slots / max(1e-9, wall), 1),
+        "mean_ttft_s": stats["mean_ttft_s"],
+        "wall_s": round(wall, 3),
+        "recompiles": recompiles,
+    }
+    assert recompiles == 0, f"tenant swaps recompiled {recompiles}x"
+    return out
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    res = run(fast=args.fast)
+    for k, v in res.items():
+        print(f"{k}: {v}")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -16,8 +16,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
-        bench_iris, bench_latency, bench_mnist, bench_snn_scale, bench_stdp,
-        bench_uart,
+        bench_iris, bench_latency, bench_mnist, bench_serve, bench_snn_scale,
+        bench_stdp, bench_uart,
     )
 
     benches = [
@@ -25,6 +25,7 @@ def main() -> None:
         ("latency", bench_latency.run),
         ("snn_scale", bench_snn_scale.run),
         ("stdp", bench_stdp.run),
+        ("serve", lambda: bench_serve.run(fast=args.fast)),
     ]
     if not args.fast:
         benches += [("iris", bench_iris.run), ("mnist", bench_mnist.run)]

@@ -33,15 +33,22 @@ import numpy as np
 from repro.configs import get_bundle
 from repro.configs.mnist_stdp import RUN, N_CLASSES, N_HIDDEN, N_INPUT
 from repro.core import connectivity
+from repro.core.engine import TickEngine
 from repro.core.lif import LIFParams
-from repro.core.network import (
-    SNNParams, SNNState, learning_rollout, params_from_registers, rollout,
-)
+from repro.core.network import SNNParams, SNNState, params_from_registers
 from repro.core.registers import RegisterBank, WeightLayout
 from repro.data import mnist
 from repro.plasticity import PlasticityState, apply_reward
 
 jax.config.update("jax_platform_name", "cpu")
+
+# One tick datapath, three uses: frozen inference, STDP feature learning,
+# R-STDP readout learning -- all the same TickEngine body, different
+# static plasticity configs (the hardware analogue: one fabric, two
+# learning-engine register settings).
+INFER = TickEngine()
+FEATURE = TickEngine(plasticity=RUN.feature)
+READOUT = TickEngine(plasticity=RUN.readout)
 
 
 # ---------------------------------------------------------------------------
@@ -116,9 +123,10 @@ def stdp_present(w, theta, x, *, backend="jnp"):
     ext = _clamp(x[None], n, RUN.ticks_per_sample)
     state = SNNState.zeros((1,), n)
     pstate = PlasticityState.zeros((1,), n)
-    (_, _, w2), raster = learning_rollout(
+    eng = dataclasses.replace(FEATURE, backend=backend)
+    (_, _, w2), raster = eng.learning_rollout(
         params, state, pstate, ext, RUN.ticks_per_sample,
-        plasticity=RUN.feature, plastic_c=plastic_mask(), backend=backend)
+        plastic_c=plastic_mask())
     ff = w2[:N_INPUT, N_INPUT:]
     scale = RUN.w_total / jnp.maximum(ff.sum(0), 1e-6)
     ff = jnp.clip(ff * scale[None, :], RUN.feature.w_min, RUN.feature.w_max)
@@ -141,7 +149,7 @@ def feature_counts(w, theta, xs):
     params = feature_net(w, theta)
     ext = _clamp(xs, n, RUN.ticks_per_sample)
     state = SNNState.zeros((xs.shape[0],), n)
-    _, raster = rollout(params, state, ext, RUN.ticks_per_sample)
+    _, raster = INFER.rollout(params, state, ext, RUN.ticks_per_sample)
     ticks = RUN.ticks_per_sample
     lat_w = jnp.arange(ticks, 0, -1, dtype=jnp.float32)  # t=0 -> weight T
     score = jnp.einsum("t,tbn->bn", lat_w, raster[..., N_INPUT:])
@@ -210,8 +218,8 @@ def rstdp_present(w_out, hid_raster, label):
     ext = jnp.zeros((ticks, 1, n)).at[:, 0, :N_HIDDEN].set(hid_raster)
     state = SNNState.zeros((1,), n)
     pstate = PlasticityState.zeros((1,), n)
-    (fin, pst, _), raster = learning_rollout(
-        params, state, pstate, ext, ticks, plasticity=RUN.readout)
+    (fin, pst, _), raster = READOUT.learning_rollout(
+        params, state, pstate, ext, ticks)
     counts = raster[:, 0, N_HIDDEN:].sum(0)
     # exact drive-image tiebreak (classifier.py idiom): count*th + residual v
     score = counts * RUN.readout_v_th + fin.lif.v[0, N_HIDDEN:]
@@ -234,7 +242,7 @@ def readout_predict(w_out, hid_raster_batch):
     b = hid_raster_batch.shape[1]
     ext = jnp.zeros((ticks, b, n)).at[..., :N_HIDDEN].set(hid_raster_batch)
     state = SNNState.zeros((b,), n)
-    fin, raster = rollout(params, state, ext, ticks)
+    fin, raster = INFER.rollout(params, state, ext, ticks)
     score = (raster[..., N_HIDDEN:].sum(0) * RUN.readout_v_th
              + fin.lif.v[:, N_HIDDEN:])
     return jnp.argmax(score, axis=-1)
@@ -300,7 +308,7 @@ def readback_roundtrip(w, theta):
         params = dataclasses.replace(
             params, w=with_lateral_inhibition(params.w))
         state = SNNState.zeros((ext.shape[1],), n)
-        _, raster = rollout(params, state, ext, RUN.ticks_per_sample)
+        _, raster = INFER.rollout(params, state, ext, RUN.ticks_per_sample)
         return np.asarray(raster)
 
     before, after = spikes(bank), spikes(bank_dev)

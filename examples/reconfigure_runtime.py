@@ -14,9 +14,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import connectivity
+from repro.core.engine import TickEngine
 from repro.core.lif import LIFParams
-from repro.core.network import SNNParams, SNNState, params_from_registers, rollout
+from repro.core.network import SNNParams, SNNState, params_from_registers
 from repro.core.registers import RegisterBank, WeightLayout
+
+ENGINE = TickEngine()  # one resident tick datapath; networks are register data
 
 N = 74  # one physical fabric, sized for the larger task
 
@@ -62,7 +65,7 @@ def main():
                         gain=lif.gain, i_bias=lif.i_bias, v_reset=lif.v_reset)
         p = SNNParams(w=w, c=c, w_in=jnp.eye(N), lif=lif)
         state = SNNState.zeros((ext.shape[1],), N)
-        _, raster = rollout(p, state, ext, ext.shape[0])
+        _, raster = ENGINE.rollout(p, state, ext, ext.shape[0])
         return raster
 
     tick = jax.jit(tick_program)

@@ -1,0 +1,80 @@
+"""Multi-tenant SNN serving: many resident networks, one compiled program.
+
+The paper's headline is that swapping a network is a *parameter
+download* -- never a re-synthesis. The serving restatement: S tenant
+networks (heterogeneous topologies, thresholds, leaks; some frozen, one
+learning online) time-share one compiled tick program, vmapped over a
+slot axis. Admitting a request = writing a slot's registers. The demo
+asserts the whole run compiles exactly once.
+
+  PYTHONPATH=src python examples/serve_multi_tenant.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import connectivity
+from repro.core.registers import RegisterBank, WeightLayout
+from repro.launch.serve import (
+    SNNServer, make_demo_requests, make_demo_tenants,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def iris_like_bank(seed: int = 0) -> RegisterBank:
+    """The paper's Iris shape (4 input -> 3 output) as a register image."""
+    n = 7
+    bank = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+    c = connectivity.layered([4, 3])
+    bank.set_connection_list(c)
+    rng = np.random.default_rng(seed)
+    bank.set_weights((rng.integers(60, 200, (n, n)) * c).astype(np.uint8))
+    bank.set_thresholds(np.full((n,), 100, np.uint8))
+    bank.set_refractory(2)
+    return bank
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    n_requests = 12 if args.fast else 48
+    server = SNNServer(n_max=24, slots=args.slots, max_ticks=12)
+
+    # 8 heterogeneous demo tenants (last one plastic) + the paper's Iris net.
+    names = make_demo_tenants(server, 8, seed=0)
+    server.add_tenant("iris", iris_like_bank(), n_in=4, n_out=3)
+    names.append("iris")
+    plastic = [t.name for t in server.tenants.values() if t.plastic]
+    print(f"fabric n_max={server.n_max}, slots={server.slots}: "
+          f"{len(server.tenants)} resident tenants ({', '.join(names)}); "
+          f"plastic: {plastic}")
+
+    reqs = make_demo_requests(server, names, n_requests, seed=1)
+
+    w_plastic0 = np.asarray(server.tenants[plastic[0]].params.w).copy()
+    stats = server.serve(reqs)
+    for k, v in stats.items():
+        if k != "preds":
+            print(f"  {k}: {v}")
+
+    assert stats["compiles"] == 1, "tenant swaps must not recompile"
+    assert stats["recompiles_after_warmup"] == 0
+    w_plastic1 = np.asarray(server.tenants[plastic[0]].params.w)
+    drift = float(np.abs(w_plastic1 - w_plastic0).sum())
+    print(f"  plastic tenant weight drift across waves: {drift:.1f} "
+          f"(frozen tenants: bit-identical by construction)")
+    assert drift > 0, "the plastic tenant never learned"
+    print("PASS - one compiled tick program served "
+          f"{stats['n_tenants']} networks / {stats['n_requests']} requests")
+    return stats
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,15 @@
 """Core: the paper's contribution -- LIF SNN with universal interconnections."""
 from repro.core.lif import LIFParams, LIFState, lif_step, lif_step_euler, lif_step_fixed_leak, lif_step_int
-from repro.core.network import SNNParams, SNNState, step, rollout, forward_layered, synaptic_input, params_from_registers
+from repro.core.engine import TickCarry, TickEngine
+from repro.core.network import SNNParams, SNNState, step, rollout, learning_rollout, forward_layered, synaptic_input, params_from_registers
 from repro.core.registers import RegisterBank, TimingModel, WeightLayout, transaction_breakdown
 from repro.core.surrogate import spike_surrogate, spike_hard
 from repro.core import connectivity, encoding, quant, uart
 
 __all__ = [
     "LIFParams", "LIFState", "lif_step", "lif_step_euler", "lif_step_fixed_leak", "lif_step_int",
-    "SNNParams", "SNNState", "step", "rollout", "forward_layered", "synaptic_input", "params_from_registers",
+    "TickCarry", "TickEngine",
+    "SNNParams", "SNNState", "step", "rollout", "learning_rollout", "forward_layered", "synaptic_input", "params_from_registers",
     "RegisterBank", "TimingModel", "WeightLayout", "transaction_breakdown",
     "spike_surrogate", "spike_hard",
     "connectivity", "encoding", "quant", "uart",

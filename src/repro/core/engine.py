@@ -1,0 +1,294 @@
+"""TickEngine: ONE scan body behind every rollout flavor.
+
+The paper's datapath is a single resident circuit -- delay-line read,
+masked synaptic accumulation (the mux fabric), LIF update, delay-line
+write -- and everything else (frozen inference, on-device learning,
+layered feed-forward sweeps, multi-tenant serving) is just a different
+*carry* threaded through that same circuit. Before this module the repo
+had three near-duplicate ``lax.scan`` bodies re-deriving the tick;
+now :meth:`TickEngine.tick_body` is the only place the tick exists, and
+``repro.core.network.rollout`` / ``learning_rollout`` /
+``forward_layered`` are thin wrappers over :meth:`TickEngine.scan`.
+
+Two structural invariants the engine owns:
+
+* **One backend dispatch point.** ``backend="jnp"`` (reference) vs
+  ``backend="pallas"`` (fused TPU kernel) is decided in exactly one
+  branch inside the tick body -- no caller ever re-implements it.
+
+* **Loop-invariant mask hoisting.** For the frozen-weight path the
+  masked matrix ``W*C`` is materialized once per rollout, *outside* the
+  scan, and closed over as a scan constant (tests/test_engine.py pins
+  this on the optimized HLO: no (n,n) multiply inside the while body).
+  The learning path recomputes ``W*C`` per tick because ``W`` lives in
+  the carry and changes every tick -- that recompute is the datapath,
+  not waste.
+
+Carry spec: :class:`TickCarry` has three slots -- ``state`` (always),
+``plast`` + ``w`` (learning only; ``None`` leaves vanish from the
+pytree, so the frozen carry is exactly the seed's ``SNNState`` carry and
+rasters stay bit-identical).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import lif_step
+from repro.core.network_types import SNNParams, SNNState  # noqa: F401 (re-export surface)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TickCarry:
+    """What one tick hands the next.
+
+    Attributes:
+      state: the network state (LIF + delay line + tick counter).
+      plast: plasticity traces/eligibility, or None on the frozen path.
+      w: the *mutable* weight matrix, or None on the frozen path (frozen
+        weights are scan constants, so they live outside the carry and
+        the hoisted ``W*C`` stays valid for the whole rollout).
+    """
+
+    state: SNNState
+    plast: Optional[Any] = None
+    w: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TickEngine:
+    """Static tick configuration (a hashable non-pytree: jit-safe to
+    close over, like the LIF ``mode`` string it generalizes).
+
+    Attributes:
+      mode: LIF formulation ("fixed_leak" | "euler" | "int").
+      surrogate: differentiable surrogate spike (training; jnp only).
+      backend: "jnp" (reference) or "pallas" (fused kernel).
+      plasticity: optional :class:`~repro.plasticity.stdp.PlasticityParams`;
+        when set *and* the carry holds weights, the plasticity hook runs
+        after the delay-line write each tick.
+      plasticity_backend: backend for the plasticity hook; defaults to
+        following ``backend``.
+    """
+
+    mode: str = "fixed_leak"
+    surrogate: bool = False
+    backend: str = "jnp"
+    plasticity: Optional[Any] = None
+    plasticity_backend: Optional[str] = None
+
+    # -- the single tick body ---------------------------------------------
+
+    def masked_weights(self, params: SNNParams, w: Optional[jax.Array] = None) -> jax.Array:
+        """``W*C``: the mux fabric's effective matrix."""
+        w = params.w if w is None else w
+        return w * params.c.astype(w.dtype)
+
+    def tick_body(
+        self,
+        carry: TickCarry,
+        xs: Tuple[Optional[jax.Array], Optional[jax.Array]],
+        *,
+        params: SNNParams,
+        wc: Optional[jax.Array] = None,
+        delays: Optional[jax.Array] = None,
+        plastic_c: Optional[jax.Array] = None,
+        learn_until: Optional[jax.Array] = None,
+    ) -> Tuple[TickCarry, jax.Array]:
+        """One synchronous network tick:
+
+        delay-line read -> synaptic input -> LIF step -> delay-line write
+        [-> plasticity hook].
+
+        Args:
+          xs: ``(ext, reward)`` -- this tick's external drive (impulse
+            registers) and dopamine scalar; either may be None.
+          wc: pre-masked ``W*C`` (frozen path; loop-invariant, hoisted by
+            the caller). None means derive it from the carry weights.
+          delays: optional per-synapse delay matrix, shape ``(n, n)`` int
+            in ``[1, max_delay]``.
+          plastic_c: learnable-synapse mask for the plasticity hook.
+          learn_until: optional scalar tick bound (runtime value): the
+            plasticity hook only commits weight/trace updates while
+            ``tick < learn_until``. Serving uses this to stop learning at
+            a request's tick budget without changing program shape.
+        """
+        ext, reward = xs
+        st = carry.state
+        learning = carry.w is not None
+        w = carry.w if learning else params.w
+        if wc is None:
+            wc = w * params.c.astype(w.dtype)
+
+        max_delay = st.delay_buf.shape[-2]
+        slot = jnp.mod(st.tick, max_delay)
+
+        if delays is None:
+            # -- delay-line read: spikes scheduled to arrive this tick.
+            arriving = jax.lax.dynamic_index_in_dim(
+                st.delay_buf, slot, axis=-2, keepdims=False
+            ) if max_delay > 1 else st.lif.y
+            # -- synaptic input + LIF step: THE backend dispatch point.
+            if self.backend == "pallas":
+                from repro.kernels import ops  # local import; CPU tests use jnp
+
+                p = dataclasses.replace(params, w=w) if learning else params
+                lif_state = ops.fused_lif_step(
+                    st.lif, arriving, p, ext,
+                    mode=self.mode, surrogate=self.surrogate)
+            else:
+                syn = arriving @ wc
+                if ext is not None:
+                    syn = syn + ext @ params.w_in
+                lif_state = lif_step(st.lif, syn, params.lif,
+                                     mode=self.mode, surrogate=self.surrogate)
+        else:
+            # -- per-synapse delays: synapse (pre,post) reads slot (tick - delay).
+            def gather_delay(d):
+                idx = jnp.mod(slot - d, max_delay)
+                return jax.lax.dynamic_index_in_dim(
+                    st.delay_buf, idx, axis=-2, keepdims=False)
+
+            hist = jnp.stack([gather_delay(d) for d in range(max_delay)], axis=0)
+            onehot = jax.nn.one_hot(delays - 1, max_delay, axis=0, dtype=wc.dtype)
+            syn = jnp.einsum("d...p,dpq,pq->...q", hist, onehot, wc)
+            if ext is not None:
+                syn = syn + ext @ params.w_in
+            lif_state = lif_step(st.lif, syn, params.lif,
+                                 mode=self.mode, surrogate=self.surrogate)
+
+        # -- delay-line write: freshly emitted spikes land at tick+1 (1-cycle min).
+        if max_delay > 1:
+            write_slot = jnp.mod(st.tick + 1, max_delay)
+            delay_buf = jax.lax.dynamic_update_index_in_dim(
+                st.delay_buf, lif_state.y, write_slot, axis=-2)
+        else:
+            delay_buf = st.delay_buf
+        state2 = SNNState(lif=lif_state, delay_buf=delay_buf, tick=st.tick + 1)
+
+        # -- plasticity hook: s_pre is what arrived (previous emissions),
+        #    s_post what was just emitted -- the NeuroCoreX shared datapath.
+        if learning and self.plasticity is not None:
+            from repro.plasticity import rules as plasticity_rules
+
+            pst2, w2 = plasticity_rules.plasticity_step(
+                carry.plast, st.lif.y, lif_state.y, w,
+                params.c if plastic_c is None else plastic_c,
+                self.plasticity, reward,
+                backend=self.plasticity_backend or self.backend)
+            if learn_until is not None:
+                gate = st.tick < learn_until
+                w2 = jnp.where(gate, w2, w)
+                pst2 = jax.tree.map(
+                    lambda new, old: jnp.where(gate, new, old),
+                    pst2, carry.plast)
+            return TickCarry(state=state2, plast=pst2, w=w2), lif_state.y
+        return TickCarry(state=state2, plast=carry.plast, w=carry.w), lif_state.y
+
+    # -- scan driver -------------------------------------------------------
+
+    def scan(
+        self,
+        params: SNNParams,
+        carry0: TickCarry,
+        ext_seq: Optional[jax.Array],
+        n_ticks: int,
+        *,
+        rewards: Optional[jax.Array] = None,
+        delays: Optional[jax.Array] = None,
+        plastic_c: Optional[jax.Array] = None,
+        learn_until: Optional[jax.Array] = None,
+    ) -> Tuple[TickCarry, jax.Array]:
+        """Scan ``n_ticks`` ticks of :meth:`tick_body`; returns
+        ``(final_carry, raster)``.
+
+        Frozen carries (``carry0.w is None``) get the hoisted ``W*C``;
+        learning carries re-derive it per tick from the carried weights.
+        """
+        learning = carry0.w is not None
+        wc = None
+        if not learning and self.backend != "pallas":
+            # Loop-invariant: materialized ONCE per rollout, a scan constant.
+            wc = self.masked_weights(params)
+
+        def body(carry, xs):
+            return self.tick_body(carry, xs, params=params, wc=wc,
+                                  delays=delays, plastic_c=plastic_c,
+                                  learn_until=learn_until)
+
+        if ext_seq is None and rewards is None:
+            return jax.lax.scan(
+                lambda c, _: body(c, (None, None)), carry0, None, length=n_ticks)
+        if ext_seq is None:
+            return jax.lax.scan(
+                lambda c, r: body(c, (None, r)), carry0, rewards, length=n_ticks)
+        if rewards is None:
+            return jax.lax.scan(
+                lambda c, e: body(c, (e, None)), carry0, ext_seq)
+        return jax.lax.scan(body, carry0, (ext_seq, rewards))
+
+    # -- convenience entry points (what the network wrappers call) --------
+
+    def tick(
+        self,
+        state: SNNState,
+        params: SNNParams,
+        ext: Optional[jax.Array] = None,
+        *,
+        delays: Optional[jax.Array] = None,
+    ) -> SNNState:
+        """One frozen-weight tick (the public ``network.step`` semantics)."""
+        carry, _ = self.tick_body(TickCarry(state=state), (ext, None),
+                                  params=params, delays=delays)
+        return carry.state
+
+    def rollout(
+        self,
+        params: SNNParams,
+        state: SNNState,
+        ext_seq: Optional[jax.Array],
+        n_ticks: int,
+        *,
+        delays: Optional[jax.Array] = None,
+    ) -> Tuple[SNNState, jax.Array]:
+        """Frozen-weight rollout; returns ``(final_state, raster)``."""
+        final, raster = self.scan(params, TickCarry(state=state), ext_seq,
+                                  n_ticks, delays=delays)
+        return final.state, raster
+
+    def learning_rollout(
+        self,
+        params: SNNParams,
+        state: SNNState,
+        plast_state: Any,
+        ext_seq: Optional[jax.Array],
+        n_ticks: int,
+        *,
+        rewards: Optional[jax.Array] = None,
+        plastic_c: Optional[jax.Array] = None,
+        learn_until: Optional[jax.Array] = None,
+    ) -> Tuple[Tuple[SNNState, Any, jax.Array], jax.Array]:
+        """Learning rollout: the carry holds mutable weights; returns
+        ``((final_state, final_plast_state, final_w), raster)``.
+
+        ``learn_until`` (optional runtime scalar) freezes the plasticity
+        hook from that tick on -- see :meth:`tick_body`."""
+        if self.plasticity is None:
+            raise ValueError("learning_rollout needs a TickEngine with plasticity set")
+        if state.delay_buf.shape[-2] != 1:
+            raise ValueError(
+                "learning_rollout requires max_delay == 1 (pair STDP reads the "
+                "previous tick's spikes as the presynaptic events)")
+        if rewards is None:
+            rewards = jnp.zeros((n_ticks,), jnp.float32)
+        if plastic_c is None:
+            plastic_c = params.c
+        carry0 = TickCarry(state=state, plast=plast_state, w=params.w)
+        final, raster = self.scan(params, carry0, ext_seq, n_ticks,
+                                  rewards=rewards, plastic_c=plastic_c,
+                                  learn_until=learn_until)
+        return (final.state, final.plast, final.w), raster

@@ -10,6 +10,12 @@ clock of the FPGA datapath after the 2-cycle neuron pipeline is abstracted
 to a tick). Spikes emitted at tick k arrive at tick k+delay. A rollout over
 T ticks is a ``lax.scan``.
 
+As of the TickEngine refactor the tick itself lives in exactly one place
+-- :meth:`repro.core.engine.TickEngine.tick_body` -- and every function
+here is a thin wrapper that builds an engine and threads the right carry
+through it. Rasters are bit-identical to the pre-engine implementations
+(pinned in tests/test_engine.py against inlined oracles).
+
 Distribution: ``batch`` shards over ``("pod","data")`` (i.e. ``"data"`` on a
 single pod) and the neuron axis over ``"model"``; the synapse matrix shards
 2-D ``P("model", None)`` on its presynaptic axis so each model shard owns
@@ -19,72 +25,17 @@ the TPU restatement of the paper's mux fabric (DESIGN.md §4).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
+import warnings
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.lif import LIFParams, LIFState, lif_step
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class SNNParams:
-    """Network parameters (all runtime inputs -- never compiled constants).
-
-    Attributes:
-      w: synaptic weights, shape ``(n, n)``; ``w[pre, post]``.
-      c: connection list, shape ``(n, n)`` bool/0-1; ``c[pre, post]``.
-      w_in: input weights, shape ``(n_in, n)`` mapping external channels
-        onto neurons (identity for the paper's networks where inputs drive
-        input-layer neurons directly).
-      lif: per-neuron :class:`LIFParams`.
-    """
-
-    w: jax.Array
-    c: jax.Array
-    w_in: jax.Array
-    lif: LIFParams
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class SNNState:
-    """Rollout state: LIF state + circular delay line.
-
-    ``delay_buf`` has shape ``(..., max_delay, n)``; slot ``(k % max_delay)``
-    holds the spikes scheduled to arrive at tick ``k``. ``max_delay == 1``
-    (the hardware default) degenerates to plain previous-tick delivery.
-    """
-
-    lif: LIFState
-    delay_buf: jax.Array
-    tick: jax.Array
-
-    @staticmethod
-    def zeros(batch_shape, n: int, max_delay: int = 1, dtype=jnp.float32) -> "SNNState":
-        return SNNState(
-            lif=LIFState.zeros(batch_shape, n, dtype=dtype),
-            delay_buf=jnp.zeros(tuple(batch_shape) + (max_delay, n), dtype=dtype),
-            tick=jnp.zeros((), dtype=jnp.int32),
-        )
-
-
-def synaptic_input(
-    spikes: jax.Array, params: SNNParams, ext: Optional[jax.Array]
-) -> jax.Array:
-    """``sum_pre s[pre] * W[pre,post] * C[pre,post] (+ ext @ W_in)``.
-
-    The masked matmul *is* the mux fabric: C routes a zero exactly where the
-    hardware's multiplexer would.
-    """
-    wc = params.w * params.c.astype(params.w.dtype)
-    syn = spikes @ wc
-    if ext is not None:
-        syn = syn + ext @ params.w_in
-    return syn
+from repro.core.engine import TickCarry, TickEngine  # noqa: F401 (public API)
+from repro.core.lif import LIFParams
+from repro.core.network_types import (  # noqa: F401 (back-compat re-exports)
+    SNNParams, SNNState, synaptic_input,
+)
 
 
 def step(
@@ -109,49 +60,8 @@ def step(
       backend: "jnp" (reference) or "pallas" (fused TPU kernel via
         :mod:`repro.kernels.ops`).
     """
-    max_delay = state.delay_buf.shape[-2]
-    slot = jnp.mod(state.tick, max_delay)
-
-    if delays is None:
-        # Default 1-cycle delay: read the spikes scheduled for *this* tick.
-        arriving = jax.lax.dynamic_index_in_dim(
-            state.delay_buf, slot, axis=-2, keepdims=False
-        ) if max_delay > 1 else state.lif.y
-        if backend == "pallas":
-            from repro.kernels import ops  # local import; CPU tests use jnp
-
-            lif_state = ops.fused_lif_step(
-                state.lif, arriving, params, ext, mode=mode, surrogate=surrogate
-            )
-        else:
-            syn = synaptic_input(arriving, params, ext)
-            lif_state = lif_step(state.lif, syn, params.lif, mode=mode, surrogate=surrogate)
-    else:
-        # Per-synapse delays: synapse (pre,post) reads slot (tick - delay).
-        # Gather per-delay spike history: hist[d] = spikes emitted d+1 ticks ago.
-        def gather_delay(d):
-            idx = jnp.mod(slot - d, max_delay)
-            return jax.lax.dynamic_index_in_dim(state.delay_buf, idx, axis=-2, keepdims=False)
-
-        hist = jnp.stack([gather_delay(d) for d in range(max_delay)], axis=0)
-        # (max_delay, ..., n_pre) x one-hot(delays-1) -> effective spikes per synapse.
-        onehot = jax.nn.one_hot(delays - 1, max_delay, axis=0, dtype=params.w.dtype)
-        wc = params.w * params.c.astype(params.w.dtype)
-        # syn[..., post] = sum_pre sum_d hist[d, ..., pre] * onehot[d, pre, post] * wc[pre, post]
-        syn = jnp.einsum("d...p,dpq,pq->...q", hist, onehot, wc)
-        if ext is not None:
-            syn = syn + ext @ params.w_in
-        lif_state = lif_step(state.lif, syn, params.lif, mode=mode, surrogate=surrogate)
-
-    # Write freshly emitted spikes into the slot for tick+1 (1-cycle min).
-    if max_delay > 1:
-        write_slot = jnp.mod(state.tick + 1, max_delay)
-        delay_buf = jax.lax.dynamic_update_index_in_dim(
-            state.delay_buf, lif_state.y, write_slot, axis=-2
-        )
-    else:
-        delay_buf = state.delay_buf
-    return SNNState(lif=lif_state, delay_buf=delay_buf, tick=state.tick + 1)
+    eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend)
+    return eng.tick(state, params, ext, delays=delays)
 
 
 def rollout(
@@ -168,18 +78,11 @@ def rollout(
     """Scan ``n_ticks`` network ticks; returns final state + spike raster.
 
     ``ext_seq`` is ``(n_ticks, ..., n_in)`` or None (autonomous dynamics).
-    The raster has shape ``(n_ticks, ..., n)``.
+    The raster has shape ``(n_ticks, ..., n)``. The masked matrix ``W*C``
+    is hoisted out of the scan (loop-invariant for frozen weights).
     """
-
-    def body(st, ext):
-        st2 = step(
-            st, params, ext, mode=mode, surrogate=surrogate, delays=delays, backend=backend
-        )
-        return st2, st2.lif.y
-
-    if ext_seq is None:
-        return jax.lax.scan(body, state, None, length=n_ticks)
-    return jax.lax.scan(body, state, ext_seq)
+    eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend)
+    return eng.rollout(params, state, ext_seq, n_ticks, delays=delays)
 
 
 def learning_rollout(
@@ -198,8 +101,8 @@ def learning_rollout(
 ) -> Tuple[Tuple[SNNState, "object", jax.Array], jax.Array]:
     """Scan ``n_ticks`` *learning* ticks: the carry holds mutable weights.
 
-    Each tick runs the inference datapath (:func:`step`) with the current
-    weight matrix, then the plasticity datapath
+    Each tick runs the inference datapath with the current weight matrix,
+    then the plasticity datapath
     (:func:`repro.plasticity.rules.plasticity_step`) on the spikes that
     tick produced: ``s_pre`` is what arrived at the neurons (the previous
     tick's emissions, ``max_delay == 1``), ``s_post`` what they emitted.
@@ -225,35 +128,10 @@ def learning_rollout(
     Returns:
       ``((final_state, final_plast_state, final_w), raster)``.
     """
-    from repro.plasticity import rules as plasticity_rules
-
-    if state.delay_buf.shape[-2] != 1:
-        raise ValueError(
-            "learning_rollout requires max_delay == 1 (pair STDP reads the "
-            "previous tick's spikes as the presynaptic events)")
-    if plasticity_backend is None:
-        plasticity_backend = backend
-    if rewards is None:
-        rewards = jnp.zeros((n_ticks,), jnp.float32)
-    if plastic_c is None:
-        plastic_c = params.c
-
-    def body(carry, xs):
-        st, pst, w = carry
-        ext, reward = xs
-        p = dataclasses.replace(params, w=w)
-        s_pre = st.lif.y
-        st2 = step(st, p, ext, mode=mode, backend=backend)
-        pst2, w2 = plasticity_rules.plasticity_step(
-            pst, s_pre, st2.lif.y, w, plastic_c, plasticity, reward,
-            backend=plasticity_backend)
-        return (st2, pst2, w2), st2.lif.y
-
-    carry0 = (state, plast_state, params.w)
-    if ext_seq is None:
-        return jax.lax.scan(
-            lambda c, r: body(c, (None, r)), carry0, rewards, length=n_ticks)
-    return jax.lax.scan(body, carry0, (ext_seq, rewards))
+    eng = TickEngine(mode=mode, backend=backend, plasticity=plasticity,
+                     plasticity_backend=plasticity_backend)
+    return eng.learning_rollout(params, state, plast_state, ext_seq, n_ticks,
+                                rewards=rewards, plastic_c=plastic_c)
 
 
 def forward_layered(
@@ -265,6 +143,7 @@ def forward_layered(
     mode: str = "fixed_leak",
     surrogate: bool = False,
     backend: str = "jnp",
+    time_major: Optional[bool] = None,
 ) -> Tuple[jax.Array, SNNState]:
     """The paper's inference pattern: clamp input-layer drive, tick until
     the wavefront crosses all layers, read output-layer spikes.
@@ -276,16 +155,38 @@ def forward_layered(
 
     Args:
       spikes_in: ``(..., n_in)`` external drive, clamped for all ticks
-        (level coding) -- or ``(T, ..., n_in)`` for a spike train.
+        (level coding) -- or ``(n_ticks, ..., n_in)`` for a spike train.
+      time_major: True -- ``spikes_in`` is a spike train with a leading
+        time axis of length ``n_ticks``; False -- ``spikes_in`` is a
+        single drive vector/batch, clamped (broadcast) over all ticks.
+        None (deprecated) falls back to the old shape heuristic, which
+        silently misreads a batch dim that happens to equal ``n_ticks``
+        -- pass ``time_major`` explicitly.
     Returns:
-      (output spike raster ``(T, ..., n_out)``, final state).
+      (output spike raster ``(n_ticks, ..., n_out)``, final state).
     """
     n = params.w.shape[0]
     depth = len(layer_sizes)
     if n_ticks is None:
         n_ticks = depth + 1
-    batch_shape = spikes_in.shape[:-1] if spikes_in.ndim >= 1 else ()
-    if spikes_in.ndim >= 2 and spikes_in.shape[0] == n_ticks and n_ticks > 1:
+    if time_major is None:
+        # Deprecated heuristic: a leading axis equal to n_ticks "must" be
+        # time. Ambiguous whenever a batch dim equals n_ticks.
+        time_major = bool(
+            spikes_in.ndim >= 2 and spikes_in.shape[0] == n_ticks and n_ticks > 1)
+        if time_major:
+            warnings.warn(
+                "forward_layered is inferring time_major=True from "
+                f"spikes_in.shape[0] == n_ticks == {n_ticks}; this heuristic "
+                "misfires when a batch dim equals n_ticks. Pass "
+                "time_major=True (spike train) or time_major=False "
+                "(clamped drive) explicitly.",
+                DeprecationWarning, stacklevel=2)
+    if time_major:
+        if spikes_in.ndim < 2 or spikes_in.shape[0] != n_ticks:
+            raise ValueError(
+                f"time_major spikes_in needs a leading time axis of length "
+                f"n_ticks={n_ticks}; got shape {spikes_in.shape}")
         ext_seq = spikes_in
         batch_shape = spikes_in.shape[1:-1]
     else:
@@ -294,9 +195,8 @@ def forward_layered(
         )
         batch_shape = spikes_in.shape[:-1]
     state = SNNState.zeros(batch_shape, n, dtype=params.w.dtype)
-    final, raster = rollout(
-        params, state, ext_seq, n_ticks, mode=mode, surrogate=surrogate, backend=backend
-    )
+    eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend)
+    final, raster = eng.rollout(params, state, ext_seq, n_ticks)
     n_out = layer_sizes[-1]
     return raster[..., n - n_out :], final
 

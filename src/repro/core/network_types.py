@@ -1,0 +1,75 @@
+"""Parameter/state pytrees shared by the tick engine and its wrappers.
+
+Split out of :mod:`repro.core.network` so that :mod:`repro.core.engine`
+(which *implements* the tick) and :mod:`repro.core.network` (which
+exposes the user-facing rollout wrappers) can both import them without a
+cycle. Everything here is re-exported from ``repro.core.network`` --
+existing callers never see the split.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFParams, LIFState
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SNNParams:
+    """Network parameters (all runtime inputs -- never compiled constants).
+
+    Attributes:
+      w: synaptic weights, shape ``(n, n)``; ``w[pre, post]``.
+      c: connection list, shape ``(n, n)`` bool/0-1; ``c[pre, post]``.
+      w_in: input weights, shape ``(n_in, n)`` mapping external channels
+        onto neurons (identity for the paper's networks where inputs drive
+        input-layer neurons directly).
+      lif: per-neuron :class:`LIFParams`.
+    """
+
+    w: jax.Array
+    c: jax.Array
+    w_in: jax.Array
+    lif: LIFParams
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SNNState:
+    """Rollout state: LIF state + circular delay line.
+
+    ``delay_buf`` has shape ``(..., max_delay, n)``; slot ``(k % max_delay)``
+    holds the spikes scheduled to arrive at tick ``k``. ``max_delay == 1``
+    (the hardware default) degenerates to plain previous-tick delivery.
+    """
+
+    lif: LIFState
+    delay_buf: jax.Array
+    tick: jax.Array
+
+    @staticmethod
+    def zeros(batch_shape, n: int, max_delay: int = 1, dtype=jnp.float32) -> "SNNState":
+        return SNNState(
+            lif=LIFState.zeros(batch_shape, n, dtype=dtype),
+            delay_buf=jnp.zeros(tuple(batch_shape) + (max_delay, n), dtype=dtype),
+            tick=jnp.zeros((), dtype=jnp.int32),
+        )
+
+
+def synaptic_input(
+    spikes: jax.Array, params: SNNParams, ext: Optional[jax.Array]
+) -> jax.Array:
+    """``sum_pre s[pre] * W[pre,post] * C[pre,post] (+ ext @ W_in)``.
+
+    The masked matmul *is* the mux fabric: C routes a zero exactly where the
+    hardware's multiplexer would.
+    """
+    wc = params.w * params.c.astype(params.w.dtype)
+    syn = spikes @ wc
+    if ext is not None:
+        syn = syn + ext @ params.w_in
+    return syn

@@ -209,6 +209,40 @@ def fused_stdp_step(
     )
 
 
+def fused_lif_step_slots(
+    lif_state: LIFState,
+    spikes: jax.Array,
+    params,  # SNNParams with a leading slot axis on every leaf
+    ext: Optional[jax.Array],
+    *,
+    mode: str = "fixed_leak",
+    surrogate: bool = False,
+    interpret: Optional[bool] = None,
+) -> LIFState:
+    """Slot-batched fused tick: S resident networks, one program.
+
+    Every leaf of ``lif_state`` / ``params`` (and ``spikes`` / ``ext``)
+    carries a leading *slot* axis of length S -- S independent register
+    images time-sharing one compiled datapath, the serving restatement of
+    the paper's one-fabric-many-networks claim.  Implemented as ``vmap``
+    over :func:`fused_lif_step`, which the Pallas batching rule lowers to
+    an extra grid dimension (interpret mode on CPU is identical).
+
+    ``launch.serve.SNNServer`` reaches the same lowering by vmapping the
+    whole engine rollout over the slot axis (so one vmap covers the
+    plasticity hook too); this array-level entry point is for callers
+    that drive single ticks of many resident networks directly --
+    equivalence against the per-slot loop is pinned in
+    tests/test_serve_snn.py.
+    """
+    f = functools.partial(fused_lif_step, mode=mode, surrogate=surrogate,
+                          interpret=interpret)
+    if ext is None:
+        return jax.vmap(lambda st, sp, p: f(st, sp, p, None))(
+            lif_state, spikes, params)
+    return jax.vmap(f)(lif_state, spikes, params, ext)
+
+
 def event_spike_matmul(
     s: jax.Array, w: jax.Array, c: jax.Array, *, k_active: int
 ) -> jax.Array:

@@ -1,15 +1,28 @@
 """Batched serving driver (the paper's kind: an inference platform).
 
-Wave-batched serving: requests are grouped into waves of ``slots``;
-each wave left-pads prompts to a common length, prefills the whole wave
-in one batched program, then decodes all slots in lock-step (one jitted
-decode program). Mirrors how the FPGA serves: one resident "fabric"
-(compiled program), per-request state swapped in registers -- and like
-the FPGA, switching requests never recompiles anything.
+Two server flavors share one shape of loop:
+
+* :class:`WaveServer` -- the LM model zoo: requests are grouped into
+  waves of ``slots``; each wave left-pads prompts to a common length,
+  prefills the whole wave in one batched program, then decodes all slots
+  in lock-step (one jitted decode program).
+
+* :class:`SNNServer` -- the SNN processor itself, multi-tenant: S
+  independent *networks* (each its own ``W/C/thresholds/leak`` register
+  image, loaded via :func:`repro.core.network.params_from_registers`)
+  ride one compiled tick program, vmapped over a slot axis. The slot
+  axis is the TPU restatement of time-sharing the mux fabric
+  (DESIGN.md §8): swapping a tenant in = rewriting a slot's registers,
+  never recompiling.
+
+Both mirror how the FPGA serves: one resident "fabric" (compiled
+program), per-request state swapped in registers -- and like the FPGA,
+switching requests never recompiles anything.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
       --requests 6 --max-new 12
+  PYTHONPATH=src python -m repro.launch.serve --arch snn --smoke
 """
 from __future__ import annotations
 
@@ -133,6 +146,342 @@ def serve(cfg, params, requests: List[Request], *, slots: int = 4,
     }
 
 
+# ---------------------------------------------------------------------------
+# Multi-tenant SNN serving: many resident networks, one compiled tick program
+# ---------------------------------------------------------------------------
+
+_PAD_VTH = 1e30  # padded neurons can never reach threshold
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One resident network: a register image padded onto the fabric.
+
+    ``params`` leaves are fabric-shaped ``(n_max, ...)``; neurons past
+    ``n`` carry an unreachable threshold (silent forever) and a zeroed
+    connection/plastic mask (can never learn). ``plastic_c`` gates the
+    learning hook per synapse: all-zero for frozen tenants, so their
+    weights come back *bit-identical* from every wave.
+    """
+
+    name: str
+    n: int
+    n_in: int
+    n_out: int
+    plastic: bool
+    params: "object"            # repro.core.network.SNNParams, padded
+    plastic_c: jax.Array        # (n_max, n_max)
+
+
+@dataclasses.dataclass
+class SNNRequest:
+    rid: int
+    tenant: str
+    ext: np.ndarray                       # (T_req, n_in) input spike train
+    n_ticks: int                          # tick budget for this request
+    rewards: Optional[np.ndarray] = None  # (T_req,) dopamine (R-STDP servers)
+    counts: Optional[np.ndarray] = None   # (n_out,) rate-decoded spike counts
+    pred: Optional[int] = None            # argmax over output neurons
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+
+def pad_tenant_params(params, n_max: int):
+    """Zero-pad an ``(n, n)`` register image onto the ``n_max`` fabric."""
+    from repro.core.lif import LIFParams
+    from repro.core.network import SNNParams
+
+    n = params.w.shape[0]
+    if n > n_max:
+        raise ValueError(f"tenant has {n} neurons; fabric holds {n_max}")
+    p2 = lambda a: jnp.pad(
+        a, ((0, n_max - a.shape[0]), (0, n_max - a.shape[1])))
+    p1 = lambda a, v=0: jnp.pad(a, (0, n_max - n), constant_values=v)
+    lif = LIFParams(
+        v_th=p1(params.lif.v_th, _PAD_VTH),
+        leak=p1(params.lif.leak),
+        r_ref=p1(params.lif.r_ref),
+        gain=p1(params.lif.gain, 1.0),
+        i_bias=p1(params.lif.i_bias),
+        v_reset=p1(params.lif.v_reset),
+    )
+    # w_in may be rectangular (n_in, n): pad each axis to the fabric size.
+    return SNNParams(w=p2(params.w), c=p2(params.c), w_in=p2(params.w_in), lif=lif)
+
+
+class SNNServer:
+    """Slot-batched multi-tenant SNN serving on one compiled tick program.
+
+    S slots x one :class:`~repro.core.engine.TickEngine`, vmapped over the
+    slot axis: every wave runs S independent networks -- heterogeneous
+    ``C`` topologies, thresholds, leaks, even a mix of frozen and plastic
+    tenants -- through ONE jitted program of static shape
+    ``(slots, max_ticks, n_max)``. Admission is wave-batched like the LM
+    :class:`WaveServer`; per-request tick budgets are runtime masks, so
+    neither budgets nor tenant swaps ever retrace (``self.compiles``
+    counts traces and must stay at 1 after warmup).
+
+    Every wave runs the *learning* tick body (the engine's plasticity
+    hook); frozen tenants pass an all-zero ``plastic_c``, which the STDP
+    rule turns into an exact no-op -- one datapath for inference and
+    learning, as NeuroCoreX does in silicon.
+    """
+
+    def __init__(self, *, n_max: int, slots: int = 8, max_ticks: int = 32,
+                 mode: str = "fixed_leak", backend: str = "jnp",
+                 plasticity=None):
+        from repro.core.engine import TickEngine
+        from repro.plasticity import PlasticityParams
+
+        self.n_max = int(n_max)
+        self.slots = int(slots)
+        self.max_ticks = int(max_ticks)
+        if plasticity is None:
+            plasticity = PlasticityParams.make(
+                "stdp", a_plus=0.5, a_minus=0.25, w_min=0.0, w_max=255.0)
+        self.engine = TickEngine(mode=mode, backend=backend,
+                                 plasticity=plasticity)
+        self.tenants: Dict[str, Tenant] = {}
+        self.compiles = 0          # incremented at TRACE time only
+        self._run = jax.jit(self._wave_fn)
+
+    # -- tenant registry ---------------------------------------------------
+
+    def add_tenant(self, name: str, bank, *, n_in: int, n_out: int,
+                   plastic: bool = False) -> Tenant:
+        """Register a tenant from its :class:`RegisterBank` image.
+
+        The bank is the wire format (the paper's UART-fed registers);
+        loading it is a parameter download -- shapes never change, so the
+        resident program is never re-traced.
+        """
+        from repro.core.network import params_from_registers
+
+        params = params_from_registers(bank)
+        return self.add_tenant_params(name, params, n_in=n_in, n_out=n_out,
+                                      plastic=plastic)
+
+    def add_tenant_params(self, name: str, params, *, n_in: int, n_out: int,
+                          plastic: bool = False) -> Tenant:
+        n = params.w.shape[0]
+        if not (0 < n_in <= n and 0 < n_out <= n):
+            raise ValueError(
+                f"tenant {name!r}: n_in={n_in}, n_out={n_out} must lie in "
+                f"[1, {n}] (the tenant's live neuron count)")
+        padded = pad_tenant_params(params, self.n_max)
+        plastic_c = padded.c if plastic else jnp.zeros_like(padded.c)
+        t = Tenant(name=name, n=n, n_in=n_in, n_out=n_out, plastic=plastic,
+                   params=padded, plastic_c=plastic_c)
+        self.tenants[name] = t
+        return t
+
+    # -- the one compiled program -----------------------------------------
+
+    def _wave_fn(self, params, ext_seq, plastic_c, rewards, budget):
+        """(slot-batched params, (S,T,N) ext, (S,N,N) mask, (S,T) rewards,
+        (S,) budgets) -> ((S,N) masked spike counts, (S,N,N) new weights).
+
+        The per-slot budget gates BOTH the rate decode (ticks >= budget
+        don't count) and the plasticity hook (``learn_until``): a request
+        never learns past its own tick budget, so the persisted weights
+        don't depend on the server's ``max_ticks`` ceiling."""
+        from repro.core.network import SNNState
+        from repro.plasticity import PlasticityState
+
+        self.compiles += 1  # trace-time side effect == compile counter
+        T, N = self.max_ticks, self.n_max
+
+        def per_slot(p, ext, pc, rew, until):
+            st = SNNState.zeros((), N)
+            pst = PlasticityState.zeros((), N)
+            (_, _, w2), raster = self.engine.learning_rollout(
+                p, st, pst, ext, T, rewards=rew, plastic_c=pc,
+                learn_until=until)
+            return raster, w2                      # (T, N), (N, N)
+
+        raster, w2 = jax.vmap(per_slot)(params, ext_seq, plastic_c, rewards,
+                                        budget)
+        # Per-request tick budgets: runtime masks, not shapes.
+        tmask = (jnp.arange(T)[None, :] < budget[:, None]).astype(raster.dtype)
+        counts = (raster * tmask[:, :, None]).sum(axis=1)   # (S, N) rate code
+        return counts, w2
+
+    # -- wave assembly (host side) ----------------------------------------
+
+    def _assemble(self, reqs: List[SNNRequest]):
+        S, T, N = self.slots, self.max_ticks, self.n_max
+        stack = lambda leaves: jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+        params = stack([self.tenants[r.tenant].params for r in reqs])
+        plastic_c = jnp.stack(
+            [self.tenants[r.tenant].plastic_c for r in reqs])
+        ext = np.zeros((S, T, N), np.float32)
+        rew = np.zeros((S, T), np.float32)
+        budget = np.zeros((S,), np.int32)
+        for i, r in enumerate(reqs):
+            t = min(r.ext.shape[0], T)
+            ext[i, :t, : r.ext.shape[1]] = r.ext[:t]
+            if r.rewards is not None:
+                rew[i, : min(len(r.rewards), T)] = r.rewards[:T]
+            budget[i] = 0 if r.rid < 0 else min(r.n_ticks, T)
+        return params, jnp.asarray(ext), plastic_c, jnp.asarray(rew), jnp.asarray(budget)
+
+    def run_wave(self, reqs: List[SNNRequest]) -> None:
+        """One wave: S tenant register images in, S rate-decoded outputs
+        (and, for plastic tenants, learned weights written back)."""
+        counts, w2 = jax.block_until_ready(self._run(*self._assemble(reqs)))
+        now = time.time()
+        counts = np.asarray(counts)
+        for i, r in enumerate(reqs):
+            if r.rid < 0:
+                continue
+            t = self.tenants[r.tenant]
+            out = counts[i, t.n - t.n_out : t.n]
+            r.counts = out
+            r.pred = int(out.argmax())
+            r.t_first = r.t_done = now
+            if t.plastic:
+                # Register write-back: the tenant's next wave starts from
+                # the weights this wave learned (still fabric-shaped).
+                t.params = dataclasses.replace(t.params, w=w2[i])
+
+    def serve(self, requests: List[SNNRequest]) -> Dict:
+        """Wave admission over a request queue + the LM server's stats.
+
+        Admission keeps at most ONE request per *plastic* tenant in any
+        wave: two slots learning from the same pre-wave registers would
+        race on the write-back (last slot wins, first request's learning
+        silently lost). Deferred duplicates ride the next wave, which
+        starts from the weights this wave learned.
+        """
+        if not requests:
+            return {"n_requests": 0, "n_tenants": 0, "waves": 0, "ticks": 0,
+                    "spikes_out": 0.0, "wall_s": 0.0, "spikes_per_s": 0.0,
+                    "slot_ticks_per_s": 0.0, "mean_ttft_s": 0.0,
+                    "compiles": self.compiles,
+                    "recompiles_after_warmup": 0, "preds": {}}
+        for r in requests:
+            r.t_submit = time.time()
+        queue = list(requests)
+        done: List[SNNRequest] = []
+        waves = 0
+        compiles0 = self.compiles
+        while queue:
+            wave, deferred, plastic_in_wave = [], [], set()
+            for r in queue:
+                t = self.tenants[r.tenant]
+                admit = len(wave) < self.slots and not (
+                    t.plastic and r.tenant in plastic_in_wave)
+                if admit:
+                    wave.append(r)
+                    if t.plastic:
+                        plastic_in_wave.add(r.tenant)
+                else:
+                    deferred.append(r)
+            queue = deferred
+            while len(wave) < self.slots:   # static batch shape: pad w/ dummy
+                wave.append(SNNRequest(
+                    rid=-1, tenant=wave[0].tenant,
+                    ext=np.zeros((1, 1), np.float32), n_ticks=0))
+            self.run_wave(wave)
+            done.extend(r for r in wave if r.rid >= 0)
+            waves += 1
+        total_spikes = float(sum(r.counts.sum() for r in done))
+        t0 = min(r.t_submit for r in done)
+        t1 = max(r.t_done for r in done)
+        return {
+            "n_requests": len(done),
+            "n_tenants": len({r.tenant for r in done}),
+            "waves": waves,
+            "ticks": waves * self.max_ticks,
+            "spikes_out": total_spikes,
+            "wall_s": round(t1 - t0, 3),
+            "spikes_per_s": round(total_spikes / max(1e-9, t1 - t0), 1),
+            "slot_ticks_per_s": round(
+                waves * self.max_ticks * self.slots / max(1e-9, t1 - t0), 1),
+            "mean_ttft_s": round(float(np.mean(
+                [r.t_first - r.t_submit for r in done])), 4),
+            "compiles": self.compiles,
+            "recompiles_after_warmup": self.compiles - (compiles0 or 1),
+            "preds": {r.rid: r.pred for r in done},
+        }
+
+
+def make_demo_tenants(server: SNNServer, n_tenants: int = 8, *,
+                      seed: int = 0) -> List[str]:
+    """Register ``n_tenants`` heterogeneous networks on the fabric.
+
+    Mixed topologies (layered / ring / sparse-random / all-to-all),
+    per-tenant thresholds and leaks, and one plastic (STDP) tenant --
+    all loaded through the byte-exact :class:`RegisterBank` wire format.
+    """
+    from repro.core import connectivity
+    from repro.core.registers import RegisterBank, WeightLayout
+
+    rng = np.random.default_rng(seed)
+    names: List[str] = []
+    n_max = server.n_max
+    for i in range(n_tenants):
+        kind = ("layered", "ring", "sparse", "dense")[i % 4]
+        n = int(rng.integers(max(6, n_max // 3), n_max + 1))
+        if kind == "layered":
+            n_in = max(2, n // 3)
+            n_out = max(2, n // 4)
+            hidden = n - n_in - n_out
+            sizes = [n_in, hidden, n_out] if hidden > 0 else [n_in, n_out]
+            c = connectivity.layered(sizes)
+        elif kind == "ring":
+            c = connectivity.ring(n, k=1 + i % 2)
+            n_in, n_out = n, n
+        elif kind == "sparse":
+            c = connectivity.sparse_random(n, 0.3, seed=seed + i)
+            n_in, n_out = n, n
+        else:
+            c = connectivity.all_to_all(n)
+            n_in, n_out = n, n
+        bank = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+        bank.set_connection_list(c)
+        bank.set_weights(
+            (rng.integers(40, 200, (n, n)) * c).astype(np.uint8))
+        bank.set_thresholds(rng.integers(60, 160, (n,)).astype(np.uint8))
+        bank.set_leak(int(rng.integers(0, 8)))
+        bank.set_refractory(int(rng.integers(0, 3)))
+        name = f"{kind}-{i}"
+        server.add_tenant(name, bank, n_in=n_in, n_out=n_out,
+                          plastic=(i == n_tenants - 1))
+        names.append(name)
+    return names
+
+
+def make_demo_requests(server: SNNServer, names: List[str], n_requests: int,
+                       *, seed: int = 0) -> List[SNNRequest]:
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        t = server.tenants[names[i % len(names)]]
+        ticks = int(rng.integers(4, server.max_ticks + 1))
+        # Impulse-register drive: spikes carry u8 magnitudes (paper Fig. 5),
+        # sized so a spike can actually cross the tenants' u8 thresholds.
+        ext = ((rng.random((ticks, t.n_in)) < 0.3)
+               * rng.integers(80, 255, (ticks, t.n_in))).astype(np.float32)
+        reqs.append(SNNRequest(rid=i, tenant=t.name, ext=ext, n_ticks=ticks))
+    return reqs
+
+
+def serve_snn_main(cfg, args) -> Dict:
+    server = SNNServer(n_max=cfg.n_neurons, slots=args.slots,
+                       max_ticks=cfg.n_ticks, mode=cfg.snn_mode)
+    names = make_demo_tenants(server, max(8, args.slots))
+    print(f"serving SNN fabric n_max={server.n_max}: {len(names)} resident "
+          f"tenants, {args.slots} slots, {args.requests} requests")
+    reqs = make_demo_requests(server, names, max(args.requests, len(names)))
+    stats = server.serve(reqs)
+    for k, v in stats.items():
+        print(f"{k}: {v}")
+    assert stats["recompiles_after_warmup"] == 0, "tenant swap recompiled!"
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -145,6 +494,8 @@ def main(argv=None):
 
     bundle = get_bundle(args.arch)
     cfg = bundle.smoke if args.smoke else bundle.model
+    if cfg.family == "snn":
+        return serve_snn_main(cfg, args)
     print(f"serving {cfg.name}: {M.n_params(cfg):,} params, "
           f"{args.slots} slots, {args.requests} requests")
     params = M.init(cfg, jax.random.PRNGKey(0))

@@ -1,0 +1,545 @@
+"""TickEngine: bit-exactness vs the pre-refactor scans, delays, hoisting.
+
+Three pins:
+
+* **Oracle equivalence** -- the seed implementations of ``rollout`` /
+  ``learning_rollout`` / ``forward_layered`` (three separate scan bodies,
+  copied verbatim below) produce bit-identical rasters and final states
+  to the TickEngine-backed wrappers, on the jnp backend, across frozen /
+  delayed / learning paths.
+
+* **Per-synapse delay round trip** -- a spike emitted at tick k arrives
+  at tick k+delay, checked against a pure-python event-scheduling
+  reference (no jnp in the reference path).
+
+* **W*C hoisting** -- the frozen-weight rollout materializes the masked
+  matrix once per rollout (outside the scanned while body), not once per
+  tick; checked on the lowered StableHLO region structure, with a
+  deliberately-unhoisted control proving the check has teeth.
+"""
+import dataclasses
+import re
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import connectivity
+from repro.core.engine import TickCarry, TickEngine
+from repro.core.lif import LIFParams, lif_step
+from repro.core.network import (
+    SNNParams, SNNState, forward_layered, learning_rollout, rollout,
+    synaptic_input,
+)
+from repro.plasticity import PlasticityParams, PlasticityState
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params(n, c, *, seed=0, v_th=1.5, leak=0.25, r_ref=1, w_scale=2.0,
+            w_in_scale=2.0):
+    rng = np.random.default_rng(seed)
+    return SNNParams(
+        w=jnp.asarray(rng.uniform(0, w_scale, (n, n)), jnp.float32),
+        c=jnp.asarray(c, jnp.float32),
+        w_in=jnp.eye(n, dtype=jnp.float32) * w_in_scale,
+        lif=LIFParams.make(n, v_th=v_th, leak=leak, r_ref=r_ref))
+
+
+def _ext(n, ticks, batch_shape=(), p=0.35, seed=1, mag=1.0):
+    rng = np.random.default_rng(seed)
+    shape = (ticks,) + tuple(batch_shape) + (n,)
+    return jnp.asarray((rng.random(shape) < p) * mag, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# The SEED implementation, copied verbatim (pre-TickEngine git history):
+# three independent scan bodies. These are the oracles.
+# ---------------------------------------------------------------------------
+
+def _seed_step(state, params, ext=None, *, mode="fixed_leak",
+               surrogate=False, delays=None):
+    max_delay = state.delay_buf.shape[-2]
+    slot = jnp.mod(state.tick, max_delay)
+    if delays is None:
+        arriving = jax.lax.dynamic_index_in_dim(
+            state.delay_buf, slot, axis=-2, keepdims=False
+        ) if max_delay > 1 else state.lif.y
+        syn = synaptic_input(arriving, params, ext)
+        lif_state = lif_step(state.lif, syn, params.lif, mode=mode,
+                             surrogate=surrogate)
+    else:
+        def gather_delay(d):
+            idx = jnp.mod(slot - d, max_delay)
+            return jax.lax.dynamic_index_in_dim(
+                state.delay_buf, idx, axis=-2, keepdims=False)
+
+        hist = jnp.stack([gather_delay(d) for d in range(max_delay)], axis=0)
+        onehot = jax.nn.one_hot(delays - 1, max_delay, axis=0,
+                                dtype=params.w.dtype)
+        wc = params.w * params.c.astype(params.w.dtype)
+        syn = jnp.einsum("d...p,dpq,pq->...q", hist, onehot, wc)
+        if ext is not None:
+            syn = syn + ext @ params.w_in
+        lif_state = lif_step(state.lif, syn, params.lif, mode=mode,
+                             surrogate=surrogate)
+    if max_delay > 1:
+        write_slot = jnp.mod(state.tick + 1, max_delay)
+        delay_buf = jax.lax.dynamic_update_index_in_dim(
+            state.delay_buf, lif_state.y, write_slot, axis=-2)
+    else:
+        delay_buf = state.delay_buf
+    return SNNState(lif=lif_state, delay_buf=delay_buf, tick=state.tick + 1)
+
+
+def _seed_rollout(params, state, ext_seq, n_ticks, *, mode="fixed_leak",
+                  surrogate=False, delays=None):
+    def body(st, ext):
+        st2 = _seed_step(st, params, ext, mode=mode, surrogate=surrogate,
+                         delays=delays)
+        return st2, st2.lif.y
+
+    if ext_seq is None:
+        return jax.lax.scan(body, state, None, length=n_ticks)
+    return jax.lax.scan(body, state, ext_seq)
+
+
+def _seed_learning_rollout(params, state, plast_state, ext_seq, n_ticks, *,
+                           plasticity, rewards=None, plastic_c=None,
+                           mode="fixed_leak"):
+    from repro.plasticity import rules as plasticity_rules
+
+    if rewards is None:
+        rewards = jnp.zeros((n_ticks,), jnp.float32)
+    if plastic_c is None:
+        plastic_c = params.c
+
+    def body(carry, xs):
+        st, pst, w = carry
+        ext, reward = xs
+        p = dataclasses.replace(params, w=w)
+        s_pre = st.lif.y
+        st2 = _seed_step(st, p, ext, mode=mode)
+        pst2, w2 = plasticity_rules.plasticity_step(
+            pst, s_pre, st2.lif.y, w, plastic_c, plasticity, reward,
+            backend="jnp")
+        return (st2, pst2, w2), st2.lif.y
+
+    carry0 = (state, plast_state, params.w)
+    if ext_seq is None:
+        return jax.lax.scan(
+            lambda c, r: body(c, (None, r)), carry0, rewards, length=n_ticks)
+    return jax.lax.scan(body, carry0, (ext_seq, rewards))
+
+
+def _seed_forward_layered(params, spikes_in, layer_sizes, n_ticks=None, *,
+                          mode="fixed_leak"):
+    n = params.w.shape[0]
+    depth = len(layer_sizes)
+    if n_ticks is None:
+        n_ticks = depth + 1
+    if spikes_in.ndim >= 2 and spikes_in.shape[0] == n_ticks and n_ticks > 1:
+        ext_seq = spikes_in
+        batch_shape = spikes_in.shape[1:-1]
+    else:
+        ext_seq = jnp.broadcast_to(spikes_in[None], (n_ticks,) + spikes_in.shape)
+        batch_shape = spikes_in.shape[:-1]
+    state = SNNState.zeros(batch_shape, n, dtype=params.w.dtype)
+    final, raster = _seed_rollout(params, state, ext_seq, n_ticks, mode=mode)
+    n_out = layer_sizes[-1]
+    return raster[..., n - n_out:], final
+
+
+def _assert_trees_bitexact(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Oracle equivalence: the engine wrappers ARE the seed scans, bit for bit.
+# ---------------------------------------------------------------------------
+
+class TestSeedEquivalence:
+    @pytest.mark.parametrize("mode", ["fixed_leak", "euler"])
+    @pytest.mark.parametrize("batch_shape", [(), (3,)])
+    def test_rollout_bitexact(self, mode, batch_shape):
+        n, ticks = 9, 12
+        p = _params(n, connectivity.sparse_random(n, 0.5, seed=3))
+        st0 = SNNState.zeros(batch_shape, n)
+        ext = _ext(n, ticks, batch_shape)
+        fin_o, ras_o = _seed_rollout(p, st0, ext, ticks, mode=mode)
+        fin_e, ras_e = rollout(p, st0, ext, ticks, mode=mode)
+        np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
+        _assert_trees_bitexact(fin_o, fin_e)
+
+    def test_rollout_autonomous_bitexact(self):
+        n = 6
+        p = _params(n, connectivity.ring(n), v_th=0.5)
+        st0 = SNNState.zeros((), n)
+        st0 = dataclasses.replace(
+            st0, lif=dataclasses.replace(st0.lif, y=jnp.ones((n,))))
+        fin_o, ras_o = _seed_rollout(p, st0, None, 7)
+        fin_e, ras_e = rollout(p, st0, None, 7)
+        np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
+        _assert_trees_bitexact(fin_o, fin_e)
+
+    def test_rollout_with_delays_bitexact(self):
+        n, ticks, max_delay = 7, 14, 3
+        rng = np.random.default_rng(5)
+        c = connectivity.sparse_random(n, 0.6, seed=5)
+        p = _params(n, c, v_th=0.8)
+        delays = jnp.asarray(
+            rng.integers(1, max_delay + 1, (n, n)), jnp.int32)
+        st0 = SNNState.zeros((), n, max_delay=max_delay)
+        ext = _ext(n, ticks, (), p=0.3, seed=6)
+        fin_o, ras_o = _seed_rollout(p, st0, ext, ticks, delays=delays)
+        fin_e, ras_e = rollout(p, st0, ext, ticks, delays=delays)
+        np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
+        _assert_trees_bitexact(fin_o, fin_e)
+
+    @pytest.mark.parametrize("rule", ["stdp", "rstdp"])
+    def test_learning_rollout_bitexact(self, rule):
+        n, ticks, b = 8, 10, 2
+        c = connectivity.sparse_random(n, 0.6, seed=7)
+        p = _params(n, c, v_th=1.0, w_scale=3.0)
+        pp = PlasticityParams.make(rule, a_plus=0.3, a_minus=0.2, w_max=16.0)
+        st0 = SNNState.zeros((b,), n)
+        pst0 = PlasticityState.zeros((b,), n)
+        ext = _ext(n, ticks, (b,), seed=8)
+        rewards = jnp.asarray(
+            np.random.default_rng(9).normal(size=(ticks,)), jnp.float32)
+        # sub-mask: only the upper-triangular synapses learn
+        plastic_c = p.c * jnp.triu(jnp.ones((n, n), jnp.float32))
+        (f1, p1, w1), r1 = _seed_learning_rollout(
+            p, st0, pst0, ext, ticks, plasticity=pp, rewards=rewards,
+            plastic_c=plastic_c)
+        (f2, p2, w2), r2 = learning_rollout(
+            p, st0, pst0, ext, ticks, plasticity=pp, rewards=rewards,
+            plastic_c=plastic_c)
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+        _assert_trees_bitexact((f1, p1), (f2, p2))
+
+    def test_forward_layered_bitexact(self):
+        sizes = [4, 5, 3]
+        n = sum(sizes)
+        p = _params(n, connectivity.layered(sizes), v_th=0.5)
+        drive = jnp.asarray(
+            (np.random.default_rng(2).random((2, n)) < 0.5), jnp.float32)
+        ras_o, fin_o = _seed_forward_layered(p, drive, sizes, n_ticks=6)
+        ras_e, fin_e = forward_layered(p, drive, sizes, n_ticks=6,
+                                       time_major=False)
+        np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
+        _assert_trees_bitexact(fin_o, fin_e)
+
+    def test_forward_layered_spike_train_bitexact(self):
+        sizes = [3, 3]
+        n = sum(sizes)
+        ticks = 5
+        p = _params(n, connectivity.layered(sizes), v_th=0.5)
+        train = _ext(n, ticks, (), p=0.5, seed=4)
+        ras_o, _ = _seed_forward_layered(p, train, sizes, n_ticks=ticks)
+        ras_e, _ = forward_layered(p, train, sizes, n_ticks=ticks,
+                                   time_major=True)
+        np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
+
+
+# ---------------------------------------------------------------------------
+# forward_layered time_major semantics (satellite: kill the shape heuristic)
+# ---------------------------------------------------------------------------
+
+class TestTimeMajor:
+    def _setup(self, n_ticks):
+        sizes = [4, 2]
+        n = sum(sizes)
+        p = _params(n, connectivity.layered(sizes), v_th=0.5)
+        # batch size == n_ticks: the ambiguous case the heuristic misreads
+        drive = jnp.asarray(
+            (np.random.default_rng(0).random((n_ticks, n)) < 0.6), jnp.float32)
+        return p, sizes, drive
+
+    def test_heuristic_fallback_warns(self):
+        p, sizes, drive = self._setup(4)
+        with pytest.warns(DeprecationWarning, match="time_major"):
+            forward_layered(p, drive, sizes, n_ticks=4)
+
+    def test_explicit_false_treats_batch_as_batch(self):
+        n_ticks = 4
+        p, sizes, drive = self._setup(n_ticks)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # explicit arg must not warn
+            ras, _ = forward_layered(p, drive, sizes, n_ticks=n_ticks,
+                                     time_major=False)
+        # clamped drive: (T, B, n_out) -- the batch axis survives
+        assert ras.shape == (n_ticks, n_ticks, sizes[-1])
+        # and equals per-sample clamped runs (the heuristic would instead
+        # have consumed axis 0 as time and produced (T, n_out))
+        for b in range(n_ticks):
+            ras_b, _ = forward_layered(p, drive[b], sizes, n_ticks=n_ticks,
+                                       time_major=False)
+            np.testing.assert_array_equal(np.asarray(ras[:, b]),
+                                          np.asarray(ras_b))
+
+    def test_explicit_true_requires_time_axis(self):
+        p, sizes, drive = self._setup(4)
+        with pytest.raises(ValueError, match="time axis"):
+            forward_layered(p, drive, sizes, n_ticks=6, time_major=True)
+
+    def test_explicit_true_matches_heuristic_train_path(self):
+        n_ticks = 4
+        p, sizes, drive = self._setup(n_ticks)
+        ras_t, _ = forward_layered(p, drive, sizes, n_ticks=n_ticks,
+                                   time_major=True)
+        assert ras_t.shape == (n_ticks, sizes[-1])
+
+
+# ---------------------------------------------------------------------------
+# Per-synapse delays vs a pure-python event-scheduling reference
+# ---------------------------------------------------------------------------
+
+def _python_delay_reference(w, c, delays, v_th, leak, r_ref, ext_seq,
+                            w_in_scale):
+    """Spike emitted at tick k arrives at tick k + delays[pre, post].
+
+    Plain-python fixed-leak LIF + explicit event scheduling; no delay
+    ring buffer, no slot arithmetic -- the semantics, stated directly.
+    """
+    n = w.shape[0]
+    T = ext_seq.shape[0]
+    v = np.zeros(n)
+    r = np.zeros(n, np.int64)
+    emitted = []                               # emitted[k][i]: spike at tick k
+    raster = np.zeros((T, n))
+    for t in range(T):
+        syn = np.zeros(n)
+        for post in range(n):
+            for pre in range(n):
+                if c[pre, post]:
+                    k = t - int(delays[pre, post])   # emission tick arriving now
+                    if k >= 0:
+                        syn[post] += w[pre, post] * emitted[k][pre]
+        syn += ext_seq[t] * w_in_scale           # w_in = eye * scale
+        active = (v != 0).astype(float)
+        leak_step = np.minimum(leak * active, np.abs(v))
+        v_tilde = v + syn - np.sign(v) * leak_step
+        y = ((v_tilde >= v_th) & (r == 0)).astype(float)
+        spiked = y > 0
+        hold = spiked | (r > 0)
+        v = np.where(hold, 0.0, v_tilde)
+        r = np.where(spiked, r_ref, np.maximum(r - 1, 0))
+        emitted.append(y)
+        raster[t] = y
+    return raster
+
+
+class TestDelayRoundTrip:
+    @pytest.mark.parametrize("max_delay", [2, 3, 4])
+    def test_engine_matches_python_reference(self, max_delay):
+        n, ticks = 6, 16
+        rng = np.random.default_rng(max_delay)
+        c = connectivity.sparse_random(n, 0.6, seed=max_delay).astype(np.float64)
+        w = rng.uniform(0.5, 2.0, (n, n))
+        delays = rng.integers(1, max_delay + 1, (n, n))
+        v_th, leak, r_ref, w_in_scale = 1.2, 0.3, 1, 2.0
+        ext = (rng.random((ticks, n)) < 0.25).astype(np.float64)
+
+        ref = _python_delay_reference(w, c, delays, v_th, leak, r_ref, ext,
+                                      w_in_scale)
+
+        p = SNNParams(
+            w=jnp.asarray(w, jnp.float32), c=jnp.asarray(c, jnp.float32),
+            w_in=jnp.eye(n, dtype=jnp.float32) * w_in_scale,
+            lif=LIFParams.make(n, v_th=v_th, leak=leak, r_ref=r_ref))
+        st0 = SNNState.zeros((), n, max_delay=max_delay)
+        _, raster = rollout(p, st0, jnp.asarray(ext, jnp.float32), ticks,
+                            delays=jnp.asarray(delays, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(raster), ref)
+
+    def test_slot_arithmetic_single_spike(self):
+        """One spike emitted at tick k arrives exactly at k + d, for every d."""
+        for d in (1, 2, 3, 4):
+            n, max_delay = 2, 4
+            c = np.zeros((n, n)); c[0, 1] = 1.0
+            p = SNNParams(
+                w=jnp.full((n, n), 5.0), c=jnp.asarray(c, jnp.float32),
+                w_in=jnp.eye(n, dtype=jnp.float32) * 5.0,
+                lif=LIFParams.make(n, v_th=1.0, leak=0.0, r_ref=0))
+            delays = jnp.full((n, n), d, jnp.int32)
+            ticks = d + 4
+            ext = jnp.zeros((ticks, n)).at[0, 0].set(1.0)  # neuron 0 fires at k=0
+            st0 = SNNState.zeros((), n, max_delay=max_delay)
+            _, raster = rollout(p, st0, ext, ticks, delays=delays)
+            r = np.asarray(raster)
+            assert r[0, 0] == 1.0
+            arrival = np.nonzero(r[:, 1])[0]
+            assert arrival.size >= 1 and arrival[0] == d, (d, r[:, 1])
+
+
+# ---------------------------------------------------------------------------
+# Satellite: W*C materialized once per rollout, not once per tick (HLO pin)
+# ---------------------------------------------------------------------------
+
+_N_HLO = 9          # distinctive shape to grep for in the HLO
+_WC_SHAPE = f"tensor<{_N_HLO}x{_N_HLO}xf32>"
+
+
+def _match_region(text, k):
+    """Return the end index of the brace region opening at ``text[k]``."""
+    depth = 0
+    for m in range(k, len(text)):
+        if text[m] == "{":
+            depth += 1
+        elif text[m] == "}":
+            depth -= 1
+            if depth == 0:
+                return m
+    return -1
+
+
+def _while_spans(text):
+    """(start, end) char spans of every ``stablehlo.while`` op's regions --
+    the ``cond`` region and the chained ``do`` region."""
+    spans = []
+    i = 0
+    while True:
+        j = text.find("stablehlo.while", i)
+        if j < 0:
+            break
+        k = text.find("{", j)
+        m = _match_region(text, k) if k >= 0 else -1
+        if m < 0:
+            break
+        spans.append((k, m))
+        i = m
+        if re.match(r"\s*do\s*\{", text[m + 1:]):
+            k2 = text.find("{", m + 1)
+            m2 = _match_region(text, k2)
+            if m2 > 0:
+                spans.append((k2, m2))
+                i = m2
+        i += 1
+    return spans
+
+
+def _wc_multiplies(text):
+    """Count (N,N) elementwise multiplies: (executed-per-tick, hoisted).
+
+    JAX outlines scan bodies into private ``func.func``s called from the
+    ``while`` op's ``do`` region, so "inside the loop" means: textually
+    within a while region, OR within any function other than ``@main``
+    (the only callers of outlined private functions in these fixtures are
+    loop bodies). Everything in ``@main`` outside a while region runs
+    once per rollout.
+    """
+    spans = _while_spans(text)
+    funcs = [(m.start(), m.group(1))
+             for m in re.finditer(r"func\.func\s+\w+\s+@([\w.\-$]+)", text)]
+    in_loop = out_of_loop = 0
+    for m in re.finditer(
+            r"stablehlo\.multiply.*" + re.escape(_WC_SHAPE), text):
+        o = m.start()
+        enclosing = "main"
+        for start, name in funcs:
+            if start < o:
+                enclosing = name
+            else:
+                break
+        if enclosing != "main" or any(a <= o <= b for a, b in spans):
+            in_loop += 1
+        else:
+            out_of_loop += 1
+    return in_loop, out_of_loop
+
+
+class TestMaskHoisting:
+    def _lower(self, fn, *args):
+        return jax.jit(fn).lower(*args).as_text()
+
+    def test_frozen_rollout_hoists_wc(self):
+        n, ticks = _N_HLO, 12
+        p = _params(n, connectivity.sparse_random(n, 0.5, seed=0))
+        st0 = SNNState.zeros((), n)
+        ext = _ext(n, ticks)
+        text = self._lower(
+            lambda pp, ss, ee: rollout(pp, ss, ee, ticks), p, st0, ext)
+        assert _while_spans(text), "scan did not lower to a while loop?"
+        in_loop, hoisted = _wc_multiplies(text)
+        assert in_loop == 0, "W*C is materialized inside the scan body"
+        assert hoisted >= 1, "hoisted W*C multiply not found in the program"
+
+    def test_forward_layered_hoists_wc(self):
+        sizes = [5, 4]
+        n = sum(sizes)
+        assert n == _N_HLO
+        p = _params(n, connectivity.layered(sizes))
+        drive = jnp.zeros((n,)).at[:5].set(1.0)
+        text = self._lower(
+            lambda pp, dd: forward_layered(pp, dd, sizes, n_ticks=6,
+                                           time_major=False)[0], p, drive)
+        in_loop, hoisted = _wc_multiplies(text)
+        assert in_loop == 0 and hoisted >= 1
+
+    def test_control_unhoisted_scan_is_detected(self):
+        """The check has teeth: a per-tick W*C recompute IS found in-body."""
+        n, ticks = _N_HLO, 12
+        p = _params(n, connectivity.sparse_random(n, 0.5, seed=0))
+        st0 = SNNState.zeros((), n)
+        ext = _ext(n, ticks)
+
+        def unhoisted(pp, ss, ee):
+            def body(st, e):
+                syn = synaptic_input(st.lif.y, pp, e)   # W*C per tick
+                lif2 = lif_step(st.lif, syn, pp.lif)
+                return dataclasses.replace(ss, lif=lif2, tick=st.tick + 1), lif2.y
+            return jax.lax.scan(body, ss, ee)
+
+        text = self._lower(unhoisted, p, st0, ext)
+        in_loop, _ = _wc_multiplies(text)
+        assert in_loop >= 1
+
+    def test_learning_rollout_keeps_wc_in_body(self):
+        """Mutable weights make W*C loop-variant: it must stay in the body."""
+        n, ticks = _N_HLO, 8
+        p = _params(n, connectivity.sparse_random(n, 0.5, seed=0))
+        pp = PlasticityParams.make("stdp", a_plus=0.1, a_minus=0.1)
+        st0 = SNNState.zeros((), n)
+        pst0 = PlasticityState.zeros((), n)
+        ext = _ext(n, ticks)
+        text = self._lower(
+            lambda a, b, c, d: learning_rollout(a, b, c, d, ticks,
+                                                plasticity=pp),
+            p, st0, pst0, ext)
+        in_loop, _ = _wc_multiplies(text)
+        assert in_loop >= 1
+
+
+# ---------------------------------------------------------------------------
+# Engine surface
+# ---------------------------------------------------------------------------
+
+class TestEngineSurface:
+    def test_step_wrapper_matches_engine_tick(self):
+        from repro.core.network import step
+        n = 7
+        p = _params(n, connectivity.ring(n), v_th=0.5)
+        st0 = SNNState.zeros((), n)
+        ext = jnp.zeros((n,)).at[0].set(1.0)
+        eng = TickEngine()
+        _assert_trees_bitexact(step(st0, p, ext), eng.tick(st0, p, ext))
+
+    def test_learning_requires_plasticity(self):
+        n = 4
+        p = _params(n, connectivity.ring(n))
+        with pytest.raises(ValueError, match="plasticity"):
+            TickEngine().learning_rollout(
+                p, SNNState.zeros((), n), PlasticityState.zeros((), n),
+                None, 3)
+
+    def test_frozen_carry_has_no_learning_leaves(self):
+        """Frozen carry pytree == seed SNNState carry (None leaves vanish)."""
+        n = 4
+        st = SNNState.zeros((), n)
+        assert len(jax.tree.leaves(TickCarry(state=st))) == len(
+            jax.tree.leaves(st))

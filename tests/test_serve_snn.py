@@ -1,0 +1,269 @@
+"""Multi-tenant SNN serving: one compiled tick program, many networks.
+
+Pins the acceptance criteria: >= 8 heterogeneous tenants (different C
+topologies and LIF registers, incl. a plastic one) through ONE jitted
+program with zero recompiles across tenant swaps; frozen tenants come
+back bit-identical from the shared learning datapath; the served
+datapath equals the core engine run tenant-by-tenant; per-request tick
+budgets mask, never retrace.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import connectivity
+from repro.core.lif import LIFParams
+from repro.core.network import SNNParams, SNNState, rollout
+from repro.core.registers import RegisterBank, WeightLayout
+from repro.launch.serve import (
+    SNNRequest, SNNServer, make_demo_requests, make_demo_tenants,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_MAX = 16
+
+
+def _server(**kw):
+    kw.setdefault("n_max", N_MAX)
+    kw.setdefault("slots", 4)
+    kw.setdefault("max_ticks", 10)
+    return SNNServer(**kw)
+
+
+def _layered_bank(n_in, n_out, *, w=120, th=80, seed=0):
+    n = n_in + n_out
+    bank = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+    c = connectivity.layered([n_in, n_out])
+    bank.set_connection_list(c)
+    rng = np.random.default_rng(seed)
+    bank.set_weights((rng.integers(w // 2, w, (n, n)) * c).astype(np.uint8))
+    bank.set_thresholds(np.full((n,), th, np.uint8))
+    return bank
+
+
+def _drive(t, n_in, *, mag=200.0, p=0.5, seed=0):
+    rng = np.random.default_rng(seed)
+    return ((rng.random((t, n_in)) < p) * mag).astype(np.float32)
+
+
+class TestOneProgramManyTenants:
+    def test_eight_heterogeneous_tenants_zero_recompiles(self):
+        server = _server(slots=4)
+        names = make_demo_tenants(server, 8, seed=1)
+        assert len(names) == 8
+        # heterogeneous: multiple topologies and register settings
+        cs = [np.asarray(server.tenants[n].params.c) for n in names]
+        assert len({c.tobytes() for c in cs}) == 8
+        reqs = make_demo_requests(server, names, 16, seed=2)
+        stats = server.serve(reqs)
+        assert stats["n_requests"] == 16
+        assert stats["n_tenants"] == 8
+        assert stats["compiles"] == 1, "slot/tenant churn must not retrace"
+        assert stats["recompiles_after_warmup"] == 0
+        # serving again (new tenants swapped through the same slots) stays warm
+        stats2 = server.serve(make_demo_requests(server, names, 8, seed=3))
+        assert stats2["compiles"] == 1
+        assert stats2["recompiles_after_warmup"] == 0
+
+    def test_served_wave_matches_core_engine_per_tenant(self):
+        """The slot axis is transparent: serving == rollout, tenant by tenant."""
+        server = _server(slots=4, max_ticks=8)
+        names = make_demo_tenants(server, 4, seed=5)
+        reqs = make_demo_requests(server, names, 4, seed=6)
+        stats = server.serve(reqs)
+        for r in reqs:
+            t = server.tenants[r.tenant]
+            ext = np.zeros((server.max_ticks, server.n_max), np.float32)
+            ext[: r.ext.shape[0], : r.ext.shape[1]] = r.ext
+            st0 = SNNState.zeros((), server.n_max)
+            _, raster = rollout(t.params, st0, jnp.asarray(ext),
+                                server.max_ticks)
+            counts = np.asarray(raster)[: r.n_ticks].sum(0)
+            expect = counts[t.n - t.n_out : t.n]
+            np.testing.assert_array_equal(r.counts, expect)
+        assert stats["recompiles_after_warmup"] == 0
+
+    def test_rate_decoded_argmax(self):
+        """A tenant wired so output neuron 1 dominates decodes to pred=1."""
+        server = _server(slots=2, max_ticks=8)
+        n_in, n_out = 3, 3
+        bank = _layered_bank(n_in, n_out, seed=0)
+        w = np.zeros((n_in + n_out, n_in + n_out), np.uint8)
+        w[:n_in, n_in + 1] = 250          # all inputs drive output neuron 1
+        bank.set_weights(w)
+        bank.set_thresholds(np.full((n_in + n_out,), 50, np.uint8))
+        server.add_tenant("biased", bank, n_in=n_in, n_out=n_out)
+        req = SNNRequest(rid=0, tenant="biased",
+                         ext=_drive(8, n_in, seed=1), n_ticks=8)
+        server.serve([req])
+        assert req.pred == 1
+        assert req.counts[1] > 0
+
+    def test_tick_budget_masks_not_retraces(self):
+        server = _server(slots=2, max_ticks=10)
+        bank = _layered_bank(4, 2, seed=3)
+        server.add_tenant("t", bank, n_in=4, n_out=2)
+        ext = _drive(10, 4, seed=4)
+        full = SNNRequest(rid=0, tenant="t", ext=ext, n_ticks=10)
+        short = SNNRequest(rid=1, tenant="t", ext=ext, n_ticks=3)
+        server.serve([full, short])
+        assert server.compiles == 1
+        assert short.counts.sum() <= full.counts.sum()
+        # budget-3 counts == the first 3 ticks of the full raster
+        t = server.tenants["t"]
+        pad = np.zeros((10, server.n_max), np.float32)
+        pad[:, :4] = ext
+        _, raster = rollout(t.params, SNNState.zeros((), server.n_max),
+                            jnp.asarray(pad), 10)
+        expect = np.asarray(raster)[:3].sum(0)[t.n - t.n_out : t.n]
+        np.testing.assert_array_equal(short.counts, expect)
+
+
+class TestPlasticTenancy:
+    def test_frozen_tenants_bit_identical_plastic_learns(self):
+        server = _server(slots=4, max_ticks=10)
+        frozen_bank = _layered_bank(4, 4, seed=7)
+        plastic_bank = _layered_bank(4, 4, seed=7)   # same image, one learns
+        server.add_tenant("frozen", frozen_bank, n_in=4, n_out=4)
+        server.add_tenant("plastic", plastic_bank, n_in=4, n_out=4,
+                          plastic=True)
+        w_frozen0 = np.asarray(server.tenants["frozen"].params.w).copy()
+        w_plastic0 = np.asarray(server.tenants["plastic"].params.w).copy()
+        np.testing.assert_array_equal(w_frozen0, w_plastic0)
+
+        ext = _drive(10, 4, p=0.7, seed=8)
+        for wave in range(3):
+            server.serve([
+                SNNRequest(rid=0, tenant="frozen", ext=ext, n_ticks=10),
+                SNNRequest(rid=1, tenant="plastic", ext=ext, n_ticks=10),
+            ])
+        w_frozen1 = np.asarray(server.tenants["frozen"].params.w)
+        w_plastic1 = np.asarray(server.tenants["plastic"].params.w)
+        # shared learning datapath, exact no-op for the frozen tenant
+        np.testing.assert_array_equal(w_frozen0, w_frozen1)
+        # the plastic tenant's registers moved (write-back across waves)
+        assert not np.array_equal(w_plastic0, w_plastic1)
+        # and stayed in the u8 register domain (serializable to the bank)
+        assert w_plastic1.min() >= 0.0 and w_plastic1.max() <= 255.0
+        assert server.compiles == 1
+
+    def test_same_plastic_tenant_twice_equals_sequential(self):
+        """Two requests for one plastic tenant must not race on write-back:
+        admission defers the duplicate, so the result equals serving them
+        strictly one after the other."""
+        def build():
+            server = _server(slots=2, max_ticks=8)
+            server.add_tenant("p", _layered_bank(4, 4, seed=12), n_in=4,
+                              n_out=4, plastic=True)
+            return server
+
+        e1, e2 = _drive(8, 4, p=0.7, seed=13), _drive(8, 4, p=0.7, seed=14)
+        together = build()
+        together.serve([
+            SNNRequest(rid=0, tenant="p", ext=e1, n_ticks=8),
+            SNNRequest(rid=1, tenant="p", ext=e2, n_ticks=8)])
+        sequential = build()
+        sequential.serve([SNNRequest(rid=0, tenant="p", ext=e1, n_ticks=8)])
+        sequential.serve([SNNRequest(rid=1, tenant="p", ext=e2, n_ticks=8)])
+        np.testing.assert_array_equal(
+            np.asarray(together.tenants["p"].params.w),
+            np.asarray(sequential.tenants["p"].params.w))
+
+    def test_budget_gates_learning_not_just_decode(self):
+        """A request's persisted weights must not depend on the server's
+        max_ticks ceiling: learning stops at the request's own budget."""
+        ext = _drive(6, 4, p=0.8, seed=15)
+
+        def learned_w(max_ticks):
+            server = _server(slots=2, max_ticks=max_ticks)
+            server.add_tenant("p", _layered_bank(4, 4, seed=16), n_in=4,
+                              n_out=4, plastic=True)
+            server.serve([SNNRequest(rid=0, tenant="p", ext=ext, n_ticks=6)])
+            return np.asarray(server.tenants["p"].params.w)
+
+        np.testing.assert_array_equal(learned_w(6), learned_w(12))
+
+    def test_serve_empty_queue(self):
+        server = _server()
+        stats = server.serve([])
+        assert stats["n_requests"] == 0 and stats["waves"] == 0
+
+    def test_rectangular_w_in_pads(self):
+        import dataclasses as dc
+        from repro.launch.serve import pad_tenant_params
+        from repro.core.network import params_from_registers
+
+        bank = _layered_bank(3, 3, seed=17)
+        p = params_from_registers(bank)
+        p = dc.replace(p, w_in=p.w_in[:3])        # (n_in, n) input map
+        padded = pad_tenant_params(p, N_MAX)
+        assert padded.w_in.shape == (N_MAX, N_MAX)
+        np.testing.assert_array_equal(np.asarray(padded.w_in[:3, :6]),
+                                      np.asarray(p.w_in))
+
+    def test_plastic_writeback_only_touches_routed_synapses(self):
+        server = _server(slots=2, max_ticks=10)
+        bank = _layered_bank(4, 4, seed=9)
+        t = server.add_tenant("p", bank, n_in=4, n_out=4, plastic=True)
+        w0 = np.asarray(t.params.w).copy()
+        c = np.asarray(t.params.c)
+        ext = _drive(10, 4, p=0.8, seed=10)
+        server.serve([SNNRequest(rid=0, tenant="p", ext=ext, n_ticks=10)])
+        w1 = np.asarray(server.tenants["p"].params.w)
+        np.testing.assert_array_equal(w0[c == 0], w1[c == 0])
+
+
+class TestPadding:
+    def test_padded_neurons_never_spike(self):
+        server = _server(slots=2, max_ticks=8)
+        bank = _layered_bank(3, 2, seed=11)
+        t = server.add_tenant("small", bank, n_in=3, n_out=2)
+        ext = np.full((8, 3), 255.0, np.float32)
+        st0 = SNNState.zeros((), server.n_max)
+        _, raster = rollout(t.params, st0,
+                            jnp.asarray(np.pad(ext, ((0, 0), (0, server.n_max - 3)))),
+                            8)
+        assert float(np.asarray(raster)[:, t.n:].sum()) == 0.0
+
+    def test_oversized_tenant_rejected(self):
+        server = _server()
+        bank = _layered_bank(N_MAX, 2)
+        with pytest.raises(ValueError, match="fabric"):
+            server.add_tenant("big", bank, n_in=N_MAX, n_out=2)
+
+
+class TestSlotBatchedOps:
+    def test_fused_lif_step_slots_matches_per_slot_loop(self):
+        from repro.kernels import ops
+        from repro.core.lif import LIFState
+
+        rng = np.random.default_rng(0)
+        S, B, n = 3, 2, 12
+        params = []
+        for s in range(S):
+            c = connectivity.sparse_random(n, 0.5, seed=s).astype(np.float32)
+            params.append(SNNParams(
+                w=jnp.asarray(rng.uniform(0, 2, (n, n)), jnp.float32),
+                c=jnp.asarray(c),
+                w_in=jnp.eye(n, dtype=jnp.float32),
+                lif=LIFParams.make(n, v_th=0.5 + s, leak=0.1 * s, r_ref=s % 2)))
+        slotted = jax.tree.map(lambda *xs: jnp.stack(xs), *params)
+        spikes = jnp.asarray((rng.random((S, B, n)) < 0.4), jnp.float32)
+        ext = jnp.asarray(rng.uniform(0, 1, (S, B, n)), jnp.float32)
+        state = LIFState(
+            v=jnp.asarray(rng.uniform(0, 1, (S, B, n)), jnp.float32),
+            r=jnp.zeros((S, B, n), jnp.int32),
+            y=spikes)
+
+        out = ops.fused_lif_step_slots(state, spikes, slotted, ext,
+                                       mode="fixed_leak", interpret=True)
+        for s in range(S):
+            st_s = LIFState(v=state.v[s], r=state.r[s], y=state.y[s])
+            ref = ops.fused_lif_step(st_s, spikes[s], params[s], ext[s],
+                                     mode="fixed_leak", interpret=True)
+            np.testing.assert_allclose(np.asarray(out.v[s]), np.asarray(ref.v),
+                                       rtol=1e-6, atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(out.y[s]),
+                                          np.asarray(ref.y))
