@@ -4,7 +4,6 @@ from __future__ import annotations
 import time
 from typing import Dict
 
-import numpy as np
 
 from repro.configs import get_bundle
 from repro.core import classifier

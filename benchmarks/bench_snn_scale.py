@@ -1,16 +1,30 @@
-"""Scaling the universal interconnect (paper Table I analogue + DESIGN §4).
+"""Scaling the universal interconnect: backend sweep + cost model.
 
-Paper Table I reports per-neuron LUT/register cost growing with fan-in.
-Our TPU analogue: per-tick FLOPs/bytes of the sharded masked synaptic
-matmul as N grows, plus the beyond-paper event-driven dispatch win at
-realistic spike rates (the mux fabric "routing zeros" vs skipping them).
-Wall-times here are CPU-interpret numbers (structure, not speed); the
-FLOP/byte model is the hardware-relevant output.
+Two readouts, one file (``BENCH_snn_scale.json`` when run as a script):
+
+* **Backend sweep** -- ticks/sec and recompile counts of the TickEngine
+  rollout across ``jnp`` (reference), ``pallas`` (fused matmul+LIF) and
+  ``pallas_fused`` (the whole-tick megakernel, one launch per tick) for
+  n in {256, 1024, 4096} with a live 4-slot delay ring. On TPU the
+  megakernel is the headline (the all-to-all O(n^2) tick is the scaling
+  wall; fusing the whole circuit removes the inter-phase HBM
+  round-trips). On CPU the kernels run in interpret mode: wall-times are
+  structure, not speed -- what CI gates on is *parity* (every backend
+  bit-exact vs jnp) and *recompiles == 0* (advancing the scalar-
+  prefetched delay pointer must never retrace).
+
+* **Cost model** -- the paper Table I analogue: per-tick FLOPs/bytes of
+  the masked synaptic matmul as N grows, the event-driven dispatch win
+  at realistic spike rates, and the 64k-neuron per-chip budget.
+
+  PYTHONPATH=src python benchmarks/bench_snn_scale.py [--fast]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,29 +33,133 @@ import numpy as np
 from repro.kernels import ops
 from repro.kernels.ref import spike_matmul_ref
 
+BACKENDS = ("jnp", "pallas", "pallas_fused")
 
-def run() -> Dict:
-    rng = np.random.default_rng(0)
-    out: Dict = {"bench": "snn scaling (paper Table I analogue)"}
+
+def _sweep_case(n: int, *, batch: int, max_delay: int, seed: int):
+    from repro.core import connectivity
+    from repro.core.lif import LIFParams
+    from repro.core.network import SNNParams, SNNState
+
+    rng = np.random.default_rng(seed)
+    c = connectivity.sparse_random(n, 0.5, seed=seed)
+    params = SNNParams(
+        w=jnp.asarray(rng.uniform(0, 2.0 / np.sqrt(n), (n, n)), jnp.float32),
+        c=jnp.asarray(c, jnp.float32),
+        w_in=jnp.eye(n, dtype=jnp.float32),
+        lif=LIFParams.make(n, v_th=1.0, leak=0.1, r_ref=1),
+    )
+    state = SNNState.zeros((batch,), n, max_delay=max_delay)
+    return params, state
+
+
+def _bench_backend(
+    backend: str, params, state, ext, n_ticks: int, reps: int,
+) -> Tuple[Dict, jax.Array]:
+    """Time a jitted rollout; returns (metrics, raster).
+
+    The compile counter is a trace-time side effect (the convention from
+    ``launch.serve.SNNServer``): the wrapped body only runs when jit
+    traces, so ``traces - 1`` after warmup + timed reps + a tick-offset
+    re-run is the recompile count -- pinned to 0.
+    """
+    from repro.core.network import rollout
+
+    traces = {"n": 0}
+
+    def fn(p, st, e):
+        traces["n"] += 1
+        return rollout(p, st, e, n_ticks, backend=backend)
+
+    jfn = jax.jit(fn)
+    final, raster = jfn(params, state, ext)          # warmup == the 1 compile
+    jax.block_until_ready(raster)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        final2, raster = jfn(params, state, ext)
+        jax.block_until_ready(raster)
+    wall = time.perf_counter() - t0
+    # Advancing the circular delay pointer (tick offset) must hit the cache:
+    # the pointer is a runtime scalar (scalar prefetch), never a constant.
+    _, raster_off = jfn(params, final, ext)
+    jax.block_until_ready(raster_off)
+    metrics = {
+        "ticks_per_s": round(n_ticks * reps / max(1e-9, wall), 2),
+        "wall_s_per_rollout": round(wall / reps, 4),
+        "recompiles": traces["n"] - 1,
+    }
+    return metrics, raster
+
+
+def run(fast: bool = True, ns: Optional[Tuple[int, ...]] = None) -> Dict:
+    from repro.configs import get_bundle
+
+    bundle = get_bundle("snn-fused")
+    cfg = bundle.smoke if fast else bundle.model
+    on_tpu = jax.default_backend() == "tpu"
+    if ns is None:
+        # CPU interpret mode exists for correctness, not speed: the full
+        # sweep (up to the snn-fused FULL fabric) is a TPU run.
+        ns = (256, 1024, 4096) if (on_tpu or not fast) else (cfg.n_neurons,)
+    n_ticks = cfg.n_ticks
+    batch, max_delay, reps = 16, 4, (2 if fast else 5)
+
+    assert cfg.snn_backend in BACKENDS, (
+        f"snn-fused config names unknown backend {cfg.snn_backend!r}")
+    out: Dict = {
+        "bench": "snn scaling: backend sweep + paper Table I cost model",
+        "backend_platform": jax.default_backend(),
+        "configured_backend": cfg.snn_backend,   # what the arch serves with
+        "n_ticks": n_ticks,
+        "batch": batch,
+        "max_delay": max_delay,
+    }
+    rng = np.random.default_rng(1)
+    for n in ns:
+        params, state = _sweep_case(n, batch=batch, max_delay=max_delay, seed=n)
+        ext = jnp.asarray(
+            (rng.random((n_ticks, batch, n)) < 0.1).astype(np.float32))
+        rasters = {}
+        for backend in BACKENDS:
+            metrics, raster = _bench_backend(
+                backend, params, state, ext, n_ticks, reps)
+            rasters[backend] = np.asarray(raster)
+            for k, v in metrics.items():
+                out[f"n{n}_{backend}_{k}"] = v
+        for backend in ("pallas", "pallas_fused"):
+            out[f"n{n}_{backend}_exact"] = bool(
+                np.array_equal(rasters[backend], rasters["jnp"]))
+        if out.get(f"n{n}_pallas_ticks_per_s"):
+            out[f"n{n}_fused_speedup_vs_pallas"] = round(
+                out[f"n{n}_pallas_fused_ticks_per_s"]
+                / out[f"n{n}_pallas_ticks_per_s"], 3)
+
+    # CI contract (CPU or TPU): every backend bit-exact, zero recompiles.
+    for n in ns:
+        for backend in ("pallas", "pallas_fused"):
+            assert out[f"n{n}_{backend}_exact"], (
+                f"{backend} diverged from jnp at n={n}")
+        for backend in BACKENDS:
+            assert out[f"n{n}_{backend}_recompiles"] == 0, (
+                f"{backend} retraced at n={n}")
+
+    # -- paper Table I cost model (kept from the seed bench) ---------------
     for n in (74, 256, 1024):
-        b = 32
-        rate = 0.05
+        b, rate = 32, 0.05
         s = (rng.random((b, n)) < rate).astype(np.float32)
         w = rng.normal(size=(n, n)).astype(np.float32)
         c = (rng.random((n, n)) < 0.5).astype(np.float32)
-
         dense_flops = 2 * b * n * n
         k_active = max(8, int(2 * rate * n))
         event_flops = 2 * b * k_active * n
         got = ops.event_spike_matmul(jnp.asarray(s), jnp.asarray(w),
                                      jnp.asarray(c), k_active=k_active)
         want = spike_matmul_ref(jnp.asarray(s), jnp.asarray(w), jnp.asarray(c))
-        exact = bool(np.allclose(got, want, rtol=1e-4, atol=1e-4))
-
         out[f"n{n}_dense_flops_per_tick"] = dense_flops
         out[f"n{n}_event_flops_per_tick"] = event_flops
         out[f"n{n}_event_speedup_model"] = dense_flops / event_flops
-        out[f"n{n}_event_exact"] = exact
+        out[f"n{n}_event_exact"] = bool(np.allclose(got, want, rtol=1e-4,
+                                                    atol=1e-4))
         out[f"n{n}_synapse_bytes_u8"] = n * n
         out[f"n{n}_spike_bytes_per_tick"] = b * n  # what the mux fabric moves
     # 64k-neuron production core, per-tick cost model on the (16,16) mesh
@@ -52,6 +170,20 @@ def run() -> Dict:
     return out
 
 
-if __name__ == "__main__":
-    for k, v in run().items():
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke sizes only (what CPU CI runs)")
+    ap.add_argument("--out", default="BENCH_snn_scale.json")
+    args = ap.parse_args(argv)
+    res = run(fast=args.fast)
+    for k, v in res.items():
         print(f"{k}: {v}")
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

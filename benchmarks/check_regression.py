@@ -1,0 +1,195 @@
+"""Benchmark-regression gate: current BENCH_*.json vs committed baselines.
+
+For every baseline file ``benchmarks/baselines/BENCH_<name>.json`` the
+matching ``BENCH_<name>.json`` from the current run (cwd by default) is
+checked key-by-key:
+
+* throughput keys (``*_per_s``) must not drop more than ``--tolerance``
+  (default 25%) below the baseline value;
+* compile-count keys (``*recompiles*`` / ``*compiles*``) must not
+  exceed the baseline -- any increase is a regression (the "no
+  re-synthesis" property, enforced);
+* exactness keys (``*_exact``) must stay true if the baseline says true;
+* a key present in the baseline but missing from the current run fails
+  (a silently dropped metric is not a pass).
+
+Baselines are *floors you refresh deliberately*, not last-run snapshots:
+commit conservative values (CI runners vary ~2x in wall-clock) and bump
+them via ``--refresh`` after a real speedup lands (see README "CI &
+benchmarks").
+
+  PYTHONPATH=src python benchmarks/check_regression.py [--tolerance 0.25]
+  PYTHONPATH=src python benchmarks/check_regression.py --refresh  # rewrite baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "baselines")
+
+# Throughput floor: headroom applied when --refresh snapshots a run, so a
+# committed baseline is well under the observed rate and the 25% gate only
+# trips on real regressions, not CI-runner speed variance (hosted runners
+# differ several-x from dev machines on interpret-mode kernels).
+REFRESH_HEADROOM = 0.33
+
+
+def _is_rate_key(k: str) -> bool:
+    return k.endswith("_per_s")
+
+
+def _is_compile_key(k: str) -> bool:
+    return "recompile" in k or k.endswith("compiles")
+
+
+def _is_exact_key(k: str) -> bool:
+    return k.endswith("_exact")
+
+
+def check_one(
+    name: str, baseline: Dict, current: Dict, tolerance: float,
+) -> List[str]:
+    """Returns a list of human-readable failures (empty == pass)."""
+    failures = []
+    for k, base in baseline.items():
+        if k.startswith("_"):
+            continue
+        if k not in current:
+            failures.append(f"{name}: metric {k!r} missing from current run")
+            continue
+        cur = current[k]
+        if _is_compile_key(k):
+            if float(cur) > float(base):
+                failures.append(
+                    f"{name}: {k} increased {base} -> {cur} (any increase fails)")
+        elif _is_rate_key(k):
+            floor = float(base) * (1.0 - tolerance)
+            if float(cur) < floor:
+                failures.append(
+                    f"{name}: {k} dropped {base} -> {cur} "
+                    f"(>{tolerance:.0%} below baseline, floor {floor:.1f})")
+        elif _is_exact_key(k):
+            if bool(base) and not bool(cur):
+                failures.append(f"{name}: {k} regressed True -> {cur}")
+    return failures
+
+
+def _load_pairs(current_dir: str) -> List[Tuple[str, Dict, Dict]]:
+    pairs = []
+    if not os.path.isdir(BASELINE_DIR):
+        raise SystemExit(f"no baseline dir at {BASELINE_DIR}")
+    for fname in sorted(os.listdir(BASELINE_DIR)):
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        with open(os.path.join(BASELINE_DIR, fname)) as f:
+            baseline = json.load(f)
+        cur_path = os.path.join(current_dir, fname)
+        if not os.path.exists(cur_path):
+            pairs.append((fname, baseline, None))
+            continue
+        with open(cur_path) as f:
+            pairs.append((fname, baseline, json.load(f)))
+    return pairs
+
+
+def refresh(current_dir: str) -> None:
+    """Rewrite each baseline from the current run, with headroom on rates.
+
+    Gated keys are taken from the *union* of baseline and current run, so
+    a metric a bench newly emits starts being gated on refresh. Two
+    refusals keep a refresh from weakening the gate: a gated baseline key
+    missing from the current run (a silently dropped metric must be
+    deleted from the baseline by hand, not by accident), and a current
+    run that is itself regressed (exact=false, or a compile count above
+    the old baseline) -- snapshotting that would disable the gate forever.
+    """
+    errors = []
+    staged = []  # validate every file first; write only if ALL pass
+    for fname, baseline, current in _load_pairs(current_dir):
+        if current is None:
+            errors.append(f"{fname}: no current run in {current_dir}")
+            continue
+        gated_current = {
+            k for k in current
+            if not k.startswith("_")
+            and (_is_rate_key(k) or _is_compile_key(k) or _is_exact_key(k))}
+        gated_base = {k for k in baseline if not k.startswith("_")}
+        for k in sorted(gated_base - set(current)):
+            errors.append(
+                f"{fname}: baseline metric {k!r} missing from current run "
+                "(delete it from the baseline by hand if retired)")
+        fresh = {}
+        for k in sorted(gated_base | gated_current):
+            if k not in current:
+                continue
+            v = current[k]
+            if _is_exact_key(k) and not bool(v):
+                errors.append(f"{fname}: refusing to baseline {k}={v} "
+                              "(would disable the parity gate)")
+            if _is_compile_key(k) and float(v) > float(baseline.get(k, 0)):
+                errors.append(f"{fname}: refusing to baseline {k}={v} "
+                              f"(above old floor {baseline.get(k, 0)})")
+            if _is_rate_key(k):
+                v = round(float(v) * REFRESH_HEADROOM, 1)
+            fresh[k] = v
+        staged.append((fname, fresh))
+    if errors:
+        for e in errors:
+            print(f"REFRESH REFUSED: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    for fname, fresh in staged:
+        path = os.path.join(BASELINE_DIR, fname)
+        with open(path, "w") as f:
+            json.dump(fresh, f, indent=2)
+            f.write("\n")
+        print(f"refreshed {path} ({len(fresh)} gated metrics)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current-dir", default=".",
+                    help="where the run's BENCH_*.json files live")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_GATE_TOLERANCE", 0.25)),
+                    help="allowed fractional ticks/sec drop (default 0.25)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="rewrite baselines from the current run (with "
+                         f"{REFRESH_HEADROOM:g}x headroom on rate keys)")
+    args = ap.parse_args(argv)
+
+    if args.refresh:
+        refresh(args.current_dir)
+        return 0
+
+    all_failures = []
+    checked = 0
+    for fname, baseline, current in _load_pairs(args.current_dir):
+        if current is None:
+            all_failures.append(f"{fname}: current run file not found in "
+                                f"{args.current_dir}")
+            continue
+        fails = check_one(fname, baseline, current, args.tolerance)
+        n_keys = sum(1 for k in baseline if not k.startswith("_"))
+        checked += n_keys
+        status = "FAIL" if fails else "ok"
+        print(f"[{status}] {fname}: {n_keys} gated metrics, "
+              f"{len(fails)} regressions")
+        all_failures += fails
+
+    for f in all_failures:
+        print(f"REGRESSION: {f}", file=sys.stderr)
+    if all_failures:
+        print(f"\nbench gate FAILED: {len(all_failures)} regression(s) "
+              f"across {checked} gated metrics", file=sys.stderr)
+        return 1
+    print(f"bench gate passed: {checked} gated metrics within tolerance "
+          f"{args.tolerance:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,18 +1,27 @@
 """Benchmark runner: one bench per paper table/figure + the roofline readout.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+Writes the full summary to ``BENCH_all.json`` (plus whatever per-bench
+``BENCH_*.json`` files the individual benches emit) and exits nonzero if
+any bench raises -- a crashed bench must fail CI, not vanish into a
+printout (the old behaviour only printed the summary and swallowed
+nothing explicitly, but gave the gate nothing to read either).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast] [--out BENCH_all.json]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
+import traceback
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="skip the training-heavy benches")
+    ap.add_argument("--out", default="BENCH_all.json")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -23,7 +32,7 @@ def main() -> None:
     benches = [
         ("uart", bench_uart.run),
         ("latency", bench_latency.run),
-        ("snn_scale", bench_snn_scale.run),
+        ("snn_scale", lambda: bench_snn_scale.run(fast=args.fast)),
         ("stdp", bench_stdp.run),
         ("serve", lambda: bench_serve.run(fast=args.fast)),
     ]
@@ -31,16 +40,28 @@ def main() -> None:
         benches += [("iris", bench_iris.run), ("mnist", bench_mnist.run)]
 
     results = {}
+    failures = []
     for name, fn in benches:
         t0 = time.time()
         print(f"=== bench:{name} ===", flush=True)
-        res = fn()
+        try:
+            res = fn()
+        except Exception as e:  # noqa: BLE001 -- recorded, then fatal at exit
+            traceback.print_exc()
+            failures.append(name)
+            results[name] = {"_error": f"{type(e).__name__}: {e}"}
+            continue
         res["_wall_s"] = round(time.time() - t0, 2)
         results[name] = res
         for k, v in res.items():
             print(f"  {k}: {v}")
+        # Per-bench artifact (what check_regression.py and CI read/upload);
+        # same file the bench's own __main__ writes.
+        with open(f"BENCH_{name}.json", "w") as f:
+            json.dump(res, f, indent=2, default=str)
 
-    # roofline summary if dry-run artifacts exist
+    # roofline summary if dry-run artifacts exist (best-effort readout of
+    # OPTIONAL artifacts -- unlike the benches above, absence is not failure)
     try:
         from benchmarks import roofline
         recs = roofline.load_records()
@@ -52,8 +73,14 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         print(f"roofline summary unavailable: {e}")
 
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=2, default=str)
+    print(f"wrote {args.out}")
     print("=== benchmark summary (json) ===")
     print(json.dumps(results, indent=2, default=str))
+    if failures:
+        print(f"FAILED benches: {', '.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -7,7 +7,6 @@ arithmetic for this exact system.
 
   PYTHONPATH=src python examples/mnist_snn.py
 """
-import numpy as np
 
 from repro.configs import get_bundle
 from repro.core import classifier
@@ -33,7 +32,7 @@ def main():
     print(f"  CL {bd.connection_list} + th {bd.thresholds} + w {bd.weights}"
           f" + imp {bd.impulses} = {bd.total} transactions")
     print(f"  paper timing: {bd.time_s(TimingModel.PAPER)*1e3:.2f} ms "
-          f"(per-bit-time arithmetic); 8N1 wire: "
+          "(per-bit-time arithmetic); 8N1 wire: "
           f"{bd.time_s(TimingModel.WIRE_8N1)*1e3:.1f} ms")
 
     pred = classifier.predict_int(dep, xte)

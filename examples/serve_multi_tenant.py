@@ -69,7 +69,7 @@ def main(argv=None):
     w_plastic1 = np.asarray(server.tenants[plastic[0]].params.w)
     drift = float(np.abs(w_plastic1 - w_plastic0).sum())
     print(f"  plastic tenant weight drift across waves: {drift:.1f} "
-          f"(frozen tenants: bit-identical by construction)")
+          "(frozen tenants: bit-identical by construction)")
     assert drift > 0, "the plastic tenant never learned"
     print("PASS - one compiled tick program served "
           f"{stats['n_tenants']} networks / {stats['n_requests']} requests")

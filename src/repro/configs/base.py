@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Mapping, Optional, Tuple
+from typing import Any, Dict, Mapping, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +55,7 @@ class ModelConfig:
     layer_sizes: Tuple[int, ...] = ()
     n_ticks: int = 4
     snn_mode: str = "fixed_leak"
+    snn_backend: str = "jnp"         # jnp | pallas | pallas_fused (TickEngine)
     # numerics
     dtype: str = "bfloat16"
     # provenance

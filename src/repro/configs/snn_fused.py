@@ -1,0 +1,43 @@
+"""Large-fabric SNN served through the whole-tick megakernel.
+
+The scaling wall for the paper's architecture is the all-to-all O(n^2)
+tick (NeuroCoreX, arXiv:2506.14138; low-end-FPGA framework,
+arXiv:2507.07284). Past ~1k neurons the split tick -- delay read, masked
+matmul, LIF, delay write as separate XLA/Pallas ops -- pays an HBM
+round-trip between every phase; ``backend="pallas_fused"``
+(`kernels/tick_fused.py`) runs the whole circuit in one kernel launch
+per tick. This bundle is the benchmark/serving shape for that backend:
+`benchmarks/bench_snn_scale.py` sweeps its sizes across all three
+backends and CI gates on the resulting `BENCH_snn_scale.json`.
+"""
+from repro.configs import register
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+FULL = ModelConfig(
+    name="snn-fused",
+    family="snn",
+    n_neurons=4096,          # the bench's largest sweep point
+    layer_sizes=(),          # free-form all-to-all, not layered
+    n_ticks=32,
+    snn_mode="fixed_leak",
+    snn_backend="pallas_fused",
+    dtype="float32",
+    source="DESIGN.md §9 whole-tick fusion of paper §II",
+)
+
+SMOKE = ModelConfig(
+    name="snn-fused-smoke",
+    family="snn",
+    n_neurons=256,
+    layer_sizes=(),
+    n_ticks=16,
+    snn_mode="fixed_leak",
+    snn_backend="pallas_fused",
+    head_pad=1,
+    dtype="float32",
+)
+
+
+@register("snn-fused")
+def bundle() -> ArchBundle:
+    return ArchBundle(model=FULL, smoke=SMOKE, parallel={"*": ParallelConfig()})

@@ -13,8 +13,12 @@ now :meth:`TickEngine.tick_body` is the only place the tick exists, and
 Two structural invariants the engine owns:
 
 * **One backend dispatch point.** ``backend="jnp"`` (reference) vs
-  ``backend="pallas"`` (fused TPU kernel) is decided in exactly one
-  branch inside the tick body -- no caller ever re-implements it.
+  ``backend="pallas"`` (fused synaptic-matmul+LIF kernel) vs
+  ``backend="pallas_fused"`` (the whole-tick megakernel: delay read,
+  masked accumulation, LIF update, delay write in ONE ``pallas_call``,
+  circular delay pointer scalar-prefetched -- see
+  :mod:`repro.kernels.tick_fused`) is decided in exactly one branch
+  inside the tick body -- no caller ever re-implements it.
 
 * **Loop-invariant mask hoisting.** For the frozen-weight path the
   masked matrix ``W*C`` is materialized once per rollout, *outside* the
@@ -67,7 +71,8 @@ class TickEngine:
     Attributes:
       mode: LIF formulation ("fixed_leak" | "euler" | "int").
       surrogate: differentiable surrogate spike (training; jnp only).
-      backend: "jnp" (reference) or "pallas" (fused kernel).
+      backend: "jnp" (reference), "pallas" (fused matmul+LIF kernel) or
+        "pallas_fused" (whole-tick megakernel, one launch per tick).
       plasticity: optional :class:`~repro.plasticity.stdp.PlasticityParams`;
         when set *and* the carry holds weights, the plasticity hook runs
         after the delay-line write each tick.
@@ -121,10 +126,30 @@ class TickEngine:
         st = carry.state
         learning = carry.w is not None
         w = carry.w if learning else params.w
+
+        max_delay = st.delay_buf.shape[-2]
+
+        if self.backend == "pallas_fused":
+            # -- whole-tick megakernel: delay read, masked accumulation, LIF
+            #    update and delay write in ONE pallas_call; the circular
+            #    pointers ride in as scalar prefetch (no retrace per tick).
+            #    ``wc`` (pre-masked, hoisted) serves the frozen path; the
+            #    learning path streams w (this tick's matrix) + c and masks
+            #    per tile in VMEM.
+            from repro.kernels import ops  # local import; CPU tests use jnp
+
+            p = dataclasses.replace(params, w=w) if learning else params
+            lif_state, delay_buf = ops.fused_tick(
+                st, p, ext, wc=wc, delays=delays,
+                mode=self.mode, surrogate=self.surrogate)
+            state2 = SNNState(lif=lif_state, delay_buf=delay_buf,
+                              tick=st.tick + 1)
+            return self._plasticity_hook(carry, st, state2, w, reward,
+                                         params, plastic_c, learn_until)
+
         if wc is None:
             wc = w * params.c.astype(w.dtype)
 
-        max_delay = st.delay_buf.shape[-2]
         slot = jnp.mod(st.tick, max_delay)
 
         if delays is None:
@@ -169,17 +194,33 @@ class TickEngine:
         else:
             delay_buf = st.delay_buf
         state2 = SNNState(lif=lif_state, delay_buf=delay_buf, tick=st.tick + 1)
+        return self._plasticity_hook(carry, st, state2, w, reward,
+                                     params, plastic_c, learn_until)
 
-        # -- plasticity hook: s_pre is what arrived (previous emissions),
-        #    s_post what was just emitted -- the NeuroCoreX shared datapath.
+    def _plasticity_hook(
+        self, carry, st, state2, w, reward, params, plastic_c, learn_until,
+    ) -> Tuple[TickCarry, jax.Array]:
+        """Shared tick tail: optionally run the plasticity datapath and
+        rebuild the carry.
+
+        ``s_pre`` is what arrived (previous emissions), ``s_post`` what was
+        just emitted -- the NeuroCoreX shared datapath. The hook always runs
+        *outside* the tick kernel (including for ``backend="pallas_fused"``):
+        learning is its own fused pass over ``(w, elig, traces)``, a disjoint
+        working set from the tick's ``(v, r, delay line)``.
+        """
+        learning = carry.w is not None
+        lif_state = state2.lif
         if learning and self.plasticity is not None:
             from repro.plasticity import rules as plasticity_rules
 
+            pb = self.plasticity_backend or self.backend
+            if pb == "pallas_fused":
+                pb = "pallas"  # the plasticity pass has no whole-tick variant
             pst2, w2 = plasticity_rules.plasticity_step(
                 carry.plast, st.lif.y, lif_state.y, w,
                 params.c if plastic_c is None else plastic_c,
-                self.plasticity, reward,
-                backend=self.plasticity_backend or self.backend)
+                self.plasticity, reward, backend=pb)
             if learn_until is not None:
                 gate = st.tick < learn_until
                 w2 = jnp.where(gate, w2, w)
@@ -213,6 +254,8 @@ class TickEngine:
         wc = None
         if not learning and self.backend != "pallas":
             # Loop-invariant: materialized ONCE per rollout, a scan constant.
+            # For "pallas_fused" this pre-masked matrix is the kernel's single
+            # weight operand (no per-tile mask multiply, no c traffic).
             wc = self.masked_weights(params)
 
         def body(carry, xs):

@@ -21,7 +21,6 @@ contents (:mod:`repro.core.registers`).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -57,8 +57,9 @@ def step(
         values in [1, max_delay]. With delays, presynaptic spikes are
         written into the delay line and each synapse reads the slot its
         delay points at.
-      backend: "jnp" (reference) or "pallas" (fused TPU kernel via
-        :mod:`repro.kernels.ops`).
+      backend: "jnp" (reference), "pallas" (fused matmul+LIF kernel) or
+        "pallas_fused" (whole-tick megakernel -- one launch per tick,
+        delay pointer scalar-prefetched; :mod:`repro.kernels.tick_fused`).
     """
     eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend)
     return eng.tick(state, params, ext, delays=delays)
@@ -122,8 +123,10 @@ def learning_rollout(
         routed synapse learns).  Pass a sub-mask to freeze part of the
         fabric -- e.g. a fixed inhibitory winner-take-all block stays
         bit-identical while the feed-forward block learns.
-      backend / plasticity_backend: "jnp" or "pallas"; the plasticity
-        backend defaults to following ``backend``.
+      backend / plasticity_backend: "jnp", "pallas" or "pallas_fused";
+        the plasticity backend defaults to following ``backend``
+        ("pallas_fused" maps to the "pallas" plasticity pass -- the
+        learning hook always runs outside the tick kernel).
 
     Returns:
       ``((final_state, final_plast_state, final_w), raster)``.
@@ -185,7 +188,7 @@ def forward_layered(
     if time_major:
         if spikes_in.ndim < 2 or spikes_in.shape[0] != n_ticks:
             raise ValueError(
-                f"time_major spikes_in needs a leading time axis of length "
+                "time_major spikes_in needs a leading time axis of length "
                 f"n_ticks={n_ticks}; got shape {spikes_in.shape}")
         ext_seq = spikes_in
         batch_shape = spikes_in.shape[1:-1]

@@ -9,10 +9,9 @@ addressable shard (same code path; jax.make_array_from_callback).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Dict, Optional
 
 import jax
-import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.data import synthetic

@@ -11,12 +11,12 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.lif import LIFParams, LIFState
+from repro.core.lif import LIFState
 from repro.kernels import lif_step as _lif_kernel
 from repro.kernels import spike_matmul as _sm_kernel
 from repro.kernels import stdp_update as _stdp_kernel
+from repro.kernels import tick_fused as _tick_kernel
 from repro.kernels import ref as _ref
 
 
@@ -150,6 +150,108 @@ def fused_lif_step(
     )
     unflat = lambda a: a.reshape(batch_shape + (n,))
     return LIFState(v=unflat(v), r=unflat(r), y=unflat(y))
+
+
+def fused_tick(
+    state,  # SNNState (avoids circular import in annotations)
+    params,  # SNNParams
+    ext: Optional[jax.Array],
+    *,
+    wc: Optional[jax.Array] = None,
+    delays: Optional[jax.Array] = None,
+    mode: str = "fixed_leak",
+    surrogate: bool = False,
+    interpret: Optional[bool] = None,
+) -> Tuple[LIFState, jax.Array]:
+    """Whole-tick bridge used by ``TickEngine`` (``backend="pallas_fused"``).
+
+    One kernel launch executes the complete tick circuit -- delay-line
+    slot read, masked synaptic accumulation, LIF update, delay-line slot
+    write -- replacing the 4-op chain of the split backends (see
+    :mod:`repro.kernels.tick_fused`). The circular read/write pointers
+    ``tick % D`` / ``(tick+1) % D`` ride in as scalar-prefetch operands,
+    so advancing the tick never retraces.
+
+    Args:
+      wc: pre-masked ``W*C`` (frozen path, hoisted by the caller as a
+        scan constant); None streams ``w`` and ``c`` separately and masks
+        per tile in VMEM (learning path -- ``params.w`` is this tick's
+        mutable matrix).
+      delays: optional per-synapse delay matrix ``(n, n)`` i32 in
+        ``[1, max_delay]``.
+
+    Returns:
+      ``(lif_state', delay_buf')`` -- the delay buffer is returned
+      unchanged when ``max_delay == 1`` (the tick never writes it, same
+      as the reference path).
+    """
+    if surrogate:
+        raise ValueError(
+            "pallas_fused backend is inference-only; use backend='jnp' to train")
+    if interpret is None:
+        interpret = not _on_tpu()
+    st = state
+    batch_shape = st.lif.v.shape[:-1]
+    n = st.lif.v.shape[-1]
+    max_delay = st.delay_buf.shape[-2]
+    flat = lambda a: a.reshape((-1, a.shape[-1]))
+    v = flat(st.lif.v)
+    r = flat(st.lif.r)
+    B = v.shape[0]
+    drive = None
+    if ext is not None:
+        drive = flat(ext) @ params.w_in
+
+    slots = jnp.stack(
+        [jnp.mod(st.tick, max_delay), jnp.mod(st.tick + 1, max_delay)]
+    ).astype(jnp.int32)
+
+    if delays is None and max_delay == 1:
+        # Degenerate ring: arriving == previous-tick emissions, no write.
+        read = flat(st.lif.y)[:, None, :]
+    else:
+        read = st.delay_buf.reshape((-1, max_delay, n))
+    write = max_delay > 1
+
+    w_op = params.w if wc is None else wc
+    c_op = params.c if wc is None else None
+
+    bb = _pick_block(B, _tick_kernel.DEFAULT_BLOCK_B, 8)
+    bn = _pick_block(n, _tick_kernel.DEFAULT_BLOCK_N, 128)
+    bk = _pick_block(n, _tick_kernel.DEFAULT_BLOCK_K, 128)
+
+    pad_b_last = lambda a, m: _pad_to(_pad_to(a, 0, bb), a.ndim - 1, m)
+    read_p = pad_b_last(read, bk)
+    w_p = _pad_to(_pad_to(w_op, 0, bk), 1, bn)
+    c_p = None if c_op is None else _pad_to(_pad_to(c_op, 0, bk), 1, bn)
+    delays_p = None
+    if delays is not None:
+        delays_p = _pad_to(
+            _pad_to(delays.astype(jnp.int32), 0, bk, value=1), 1, bn, value=1)
+    v_p = pad_b_last(v, bn)
+    # Padded neurons must never spike: give them refractory lock + huge th.
+    r_p = _pad_to(_pad_to(r, 0, bb), 1, bn, value=1)
+    drive_p = None if drive is None else pad_b_last(drive, bn)
+    dly_full_p = pad_b_last(read, bn) if write else None
+    big = jnp.finfo(jnp.float32).max / 2
+    vth_p = _pad_to(params.lif.v_th, 0, bn, value=big)
+    leak_p = _pad_to(params.lif.leak, 0, bn)
+    rref_p = _pad_to(params.lif.r_ref, 0, bn)
+    gain_p = _pad_to(params.lif.gain, 0, bn)
+    ibias_p = _pad_to(params.lif.i_bias, 0, bn)
+    vreset_p = _pad_to(params.lif.v_reset, 0, bn)
+
+    v_new, r_new, y, dly_new = _tick_kernel.fused_tick(
+        slots, read_p, w_p, c_p, delays_p, v_p, r_p, drive_p, dly_full_p,
+        vth_p, leak_p, rref_p, gain_p, ibias_p, vreset_p,
+        mode=mode, block_b=bb, block_n=bn, block_k=bk, interpret=interpret,
+    )
+    unflat = lambda a: a[:B, :n].reshape(batch_shape + (n,))
+    lif = LIFState(v=unflat(v_new), r=unflat(r_new), y=unflat(y))
+    if not write:
+        return lif, st.delay_buf
+    delay_buf = dly_new[:B, :, :n].reshape(batch_shape + (max_delay, n))
+    return lif, delay_buf
 
 
 def fused_stdp_step(

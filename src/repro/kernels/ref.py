@@ -6,7 +6,7 @@ Every kernel in this package must match its oracle here to
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ exists in HBM, halving weight-side HBM traffic vs a separate mask kernel.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,286 @@
+"""Whole-tick fused kernel: delay read -> masked matmul -> LIF -> delay write.
+
+The paper's datapath is ONE resident circuit that completes the entire
+tick -- delay-line slot read, all-to-all masked synaptic accumulation,
+LIF update, delay-line slot write -- before the next tick starts; that
+single-circuit property is why the FPGA hits its latency numbers.
+:mod:`repro.kernels.lif_step` fused the *middle* of that tick (matmul +
+LIF) but still left the delay-line read and write as separate XLA ops,
+i.e. two extra HBM round-trips per tick on the raster and the delay
+buffer. This kernel closes the loop: one ``pallas_call`` per tick is the
+whole circuit.
+
+Structure (grid ``(B/bB, N/bN, K/bK)``, K the presynaptic contraction
+axis, K-steps accumulating into a VMEM f32 scratch):
+
+* **Delay-line read at zero cost.** The circular read pointer
+  ``slot = tick % D`` is a *runtime scalar*, so the slot cannot be baked
+  into a BlockSpec constant without retracing every tick. It rides in as
+  a scalar-prefetch operand (``pltpu.PrefetchScalarGridSpec``): the
+  index map of the delay-buffer operand reads ``slots_ref[0]`` and the
+  pipeline DMAs exactly the one ``(bB, 1, bK)`` slot tile the tick
+  needs -- the read costs the same HBM traffic as a plain spike-vector
+  load, and changing ``tick`` never recompiles.
+* **Masked accumulation.** Same as :mod:`lif_step`: ``w*c`` fused per
+  tile in VMEM (the mux that routes a zero, at zero bandwidth), double-
+  buffered by the Pallas pipeline across K steps. The frozen path passes
+  a pre-masked ``W*C`` scan constant instead (no ``c`` operand at all --
+  half the weight-side traffic); the learning path streams ``w`` and
+  ``c`` separately because ``w`` changes every tick.
+* **Per-synapse delays.** With a delay matrix, synapse ``(pre, post)``
+  with delay ``d`` reads history slot ``(slot - (d-1)) % D``. The kernel
+  loads the full ``(bB, D, bK)`` history tile, builds the d-major
+  flattened ``(bB, D*bK) @ (D*bK, bN)`` product with per-delay masked
+  weight planes -- the same contraction, in the same d-major order, as
+  the reference einsum in ``TickEngine.tick_body``.
+* **LIF epilogue + delay-line write.** On the last K step the shared
+  :func:`repro.kernels.lif_step._lif_epilogue` runs in VREGs and the
+  fresh spikes are stored into write slot ``slots_ref[1] = (tick+1) % D``
+  of the output delay buffer (the other ``D-1`` slots stream through
+  unchanged from the input tile).
+
+All shapes must be pre-padded to block multiples by the caller
+(:func:`repro.kernels.ops.fused_tick` handles padding, slot scalars,
+and the state-dataclass bridge).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+from repro.kernels.lif_step import _lif_epilogue
+
+DEFAULT_BLOCK_B = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 512
+
+
+def _tick_kernel(
+    slots_ref,          # (2,) i32 in SMEM: [read_slot, write_slot]
+    *refs,
+    mode: str,
+    n_delay: int,
+    has_c: bool,
+    has_delays: bool,
+    has_drive: bool,
+    write_delay: bool,
+):
+    """One grid step of the whole-tick circuit.
+
+    ``refs`` carries, in order: the variable-presence inputs
+    (``dly_read, w, [c], [delays], v, r, [drive], [dly_full]``), the six
+    per-neuron parameter rows, the outputs (``v', r', y', [dly']``), and
+    the f32 accumulator scratch.
+    """
+    it = iter(refs)
+    dly_read_ref = next(it)
+    w_ref = next(it)
+    c_ref = next(it) if has_c else None
+    delays_ref = next(it) if has_delays else None
+    v_ref = next(it)
+    r_in_ref = next(it)
+    drive_ref = next(it) if has_drive else None
+    dly_full_ref = next(it) if write_delay else None
+    vth_ref, leak_ref, rref_ref, gain_ref, ibias_ref, vreset_ref = (
+        next(it), next(it), next(it), next(it), next(it), next(it))
+    v_out_ref, r_out_ref, y_out_ref = next(it), next(it), next(it)
+    dly_out_ref = next(it) if write_delay else None
+    acc_ref = next(it)
+
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Masked MXU tile: the mux fabric. On the frozen path w IS W*C already.
+    wc = w_ref[...].astype(jnp.float32)
+    if has_c:
+        wc = wc * c_ref[...].astype(jnp.float32)
+
+    if not has_delays:
+        # Uniform delay: the BlockSpec index map already steered the DMA at
+        # the scalar-prefetched read slot; the tile is (bB, 1, bK).
+        s = dly_read_ref[:, 0, :].astype(jnp.float32)
+        acc_ref[...] += jnp.dot(s, wc, preferred_element_type=jnp.float32)
+    else:
+        # Per-synapse delays: synapse with delay d reads history slot
+        # (slot - (d-1)) % D. Build the d-major flattened contraction so the
+        # summation order matches the reference einsum exactly.
+        slot = slots_ref[0]
+        hist = [
+            dly_read_ref[:, pl.ds(jax.lax.rem(slot - d + n_delay, n_delay), 1), :][:, 0, :]
+            for d in range(n_delay)
+        ]
+        hist_flat = jnp.concatenate(hist, axis=1).astype(jnp.float32)  # (bB, D*bK)
+        d_ids = delays_ref[...]
+        w_planes = [wc * (d_ids == d + 1).astype(jnp.float32) for d in range(n_delay)]
+        w_flat = jnp.concatenate(w_planes, axis=0)                     # (D*bK, bN)
+        acc_ref[...] += jnp.dot(hist_flat, w_flat,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        v = v_ref[...].astype(jnp.float32)
+        r = r_in_ref[...]
+        drive = drive_ref[...].astype(jnp.float32) if has_drive else None
+        v_new, r_new, spiked = _lif_epilogue(
+            acc_ref[...], v, r, drive,
+            vth_ref[...].astype(jnp.float32),
+            leak_ref[...].astype(jnp.float32),
+            rref_ref[...],
+            gain_ref[...].astype(jnp.float32),
+            ibias_ref[...].astype(jnp.float32),
+            vreset_ref[...].astype(jnp.float32),
+            mode,
+        )
+        y = spiked.astype(y_out_ref.dtype)
+        v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+        r_out_ref[...] = r_new.astype(r_out_ref.dtype)
+        y_out_ref[...] = y
+        if write_delay:
+            # Delay-line write: fresh spikes land at slot (tick+1) % D; the
+            # other D-1 slots stream through from the input tile unchanged.
+            buf = dly_full_ref[...]
+            dly_out_ref[...] = buf
+            dly_out_ref[:, pl.ds(slots_ref[1], 1), :] = (
+                y[:, None, :].astype(dly_out_ref.dtype))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "block_b", "block_n", "block_k", "interpret"),
+)
+def fused_tick(
+    slots: jax.Array,
+    dly_read: jax.Array,
+    w: jax.Array,
+    c: Optional[jax.Array],
+    delays: Optional[jax.Array],
+    v: jax.Array,
+    r: jax.Array,
+    drive: Optional[jax.Array],
+    dly_full: Optional[jax.Array],
+    v_th: jax.Array,
+    leak: jax.Array,
+    r_ref: jax.Array,
+    gain: jax.Array,
+    i_bias: jax.Array,
+    v_reset: jax.Array,
+    *,
+    mode: str = "fixed_leak",
+    block_b: int = DEFAULT_BLOCK_B,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array, Optional[jax.Array]]:
+    """One whole network tick as a single ``pallas_call``.
+
+    Shapes (pre-padded to block multiples):
+
+    * ``slots``: (2,) i32 -- ``[tick % D, (tick+1) % D]`` (scalar prefetch).
+    * ``dly_read``: (B, Dr, K) spike history. Uniform-delay reads take the
+      one prefetched slot; per-synapse delays take all ``Dr`` slots.
+    * ``w``: (K, N) weights -- pre-masked ``W*C`` when ``c`` is None.
+    * ``c``: (K, N) connection mask or None (frozen pre-masked path).
+    * ``delays``: (K, N) i32 in ``[1, Dr]`` or None (uniform 1-tick delay).
+    * ``v``/``drive``: (B, N) f32; ``r``: (B, N) i32.
+    * ``dly_full``: (B, D, N) delay buffer to write through, or None when
+      the tick does not write the delay line (``max_delay == 1``).
+    * per-neuron params: (N,), reshaped to (1, N) rows.
+
+    Returns ``(v', r', y', dly')`` with ``dly'`` None iff ``dly_full`` is.
+    """
+    B, n_read, K = dly_read.shape
+    N = w.shape[1]
+    if B % block_b or N % block_n or K % block_k:
+        raise ValueError(
+            f"shapes must be block-aligned: B={B}%{block_b}, "
+            f"N={N}%{block_n}, K={K}%{block_k}")
+    if mode not in ("fixed_leak", "euler"):
+        raise ValueError(f"fused tick supports fixed_leak|euler, got {mode!r}")
+    has_c = c is not None
+    has_delays = delays is not None
+    has_drive = drive is not None
+    write_delay = dly_full is not None
+    n_delay = n_read
+
+    grid = (B // block_b, N // block_n, K // block_k)
+    bspec_bn = pl.BlockSpec((block_b, block_n), lambda i, j, k, s: (i, j))
+    bspec_kn = pl.BlockSpec((block_k, block_n), lambda i, j, k, s: (k, j))
+    bspec_param = pl.BlockSpec((1, block_n), lambda i, j, k, s: (0, j))
+
+    if has_delays:
+        # Full history tile: every slot participates in the contraction.
+        read_spec = pl.BlockSpec(
+            (block_b, n_read, block_k), lambda i, j, k, s: (i, 0, k))
+    else:
+        # The scalar-prefetched circular pointer steers the DMA: only the
+        # slot arriving this tick ever leaves HBM.
+        read_spec = pl.BlockSpec(
+            (block_b, 1, block_k), lambda i, j, k, s: (i, s[0], k))
+
+    in_specs = [read_spec, bspec_kn]
+    inputs = [dly_read, w]
+    if has_c:
+        in_specs.append(bspec_kn)
+        inputs.append(c)
+    if has_delays:
+        in_specs.append(bspec_kn)
+        inputs.append(delays)
+    in_specs += [bspec_bn, bspec_bn]
+    inputs += [v, r]
+    if has_drive:
+        in_specs.append(bspec_bn)
+        inputs.append(drive)
+    if write_delay:
+        D = dly_full.shape[1]
+        dly_bn = pl.BlockSpec((block_b, D, block_n), lambda i, j, k, s: (i, 0, j))
+        in_specs.append(dly_bn)
+        inputs.append(dly_full)
+    row = lambda a: a.reshape(1, N)
+    in_specs += [bspec_param] * 6
+    inputs += [row(v_th), row(leak), row(r_ref), row(gain), row(i_bias),
+               row(v_reset)]
+
+    out_specs = [bspec_bn, bspec_bn, bspec_bn]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, N), v.dtype),
+        jax.ShapeDtypeStruct((B, N), r.dtype),
+        jax.ShapeDtypeStruct((B, N), dly_read.dtype),
+    ]
+    if write_delay:
+        out_specs.append(dly_bn)
+        out_shape.append(jax.ShapeDtypeStruct(dly_full.shape, dly_full.dtype))
+
+    kernel = functools.partial(
+        _tick_kernel, mode=mode, n_delay=n_delay, has_c=has_c,
+        has_delays=has_delays, has_drive=has_drive, write_delay=write_delay)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((block_b, block_n), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(slots.astype(jnp.int32), *inputs)
+    if write_delay:
+        v_new, r_new, y, dly_new = out
+        return v_new, r_new, y, dly_new
+    v_new, r_new, y = out
+    return v_new, r_new, y, None

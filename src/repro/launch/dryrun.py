@@ -187,7 +187,8 @@ def run_snn_cell(arch: str, multi_pod: bool, out_dir: str,
     s = lambda *spec: NamedSharding(mesh, P(*spec))
 
     def tick_rollout(params, state, ext):
-        final, raster = rollout(params, state, ext, n_ticks, mode=cfg.snn_mode)
+        final, raster = rollout(params, state, ext, n_ticks, mode=cfg.snn_mode,
+                                backend=cfg.snn_backend)
         return final.lif.v, raster.sum(axis=(0, 1))
 
     f32 = jnp.float32

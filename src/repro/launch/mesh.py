@@ -7,14 +7,11 @@ initialization and only then builds meshes.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 
 from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
-from repro.parallel.sharding import (
-    AxisRules, BASE_RULES, fsdp_overrides, multipod_overrides, seq_shard_overrides,
-)
+from repro.parallel.sharding import AxisRules, BASE_RULES, fsdp_overrides, multipod_overrides
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

@@ -7,8 +7,7 @@ are the same program.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,7 @@ from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
 from repro.models import model as M
 from repro.models.common import logical_axes, shape_structs
 from repro.optim import adafactor, adamw, clip, schedule
-from repro.parallel.sharding import AxisRules, constrain, use_rules
+from repro.parallel.sharding import AxisRules
 
 
 class TrainState(NamedTuple):
@@ -80,7 +79,6 @@ def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules):
 
 def state_structs(cfg: ModelConfig, pcfg: ParallelConfig, rules: Optional[AxisRules]):
     p = shape_structs(M.specs(cfg), M.dtype_of(cfg), rules)
-    zero = lambda sds: sds  # already structs
     if pcfg.optimizer == "adamw":
         sd = jnp.dtype(pcfg.opt_state_dtype)
         mom_axes = _axes_tree(cfg)

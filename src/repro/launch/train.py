@@ -19,7 +19,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.configs import get_bundle
@@ -27,7 +26,7 @@ from repro.configs.base import ShapeConfig
 from repro.data import pipeline
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_rules
-from repro.parallel.sharding import AxisRules, BASE_RULES, use_rules
+from repro.parallel.sharding import AxisRules, use_rules
 from repro.runtime import fault_tolerance as ft
 from repro.runtime.straggler import StragglerMonitor
 

@@ -219,7 +219,6 @@ def self_attention(
 def _decode_sdpa(q, ke, ve, valid) -> jax.Array:
     """q: (B, q_len, Hqp, Dh) vs kv_seq-sharded expanded cache."""
     b, sq, hqp, dh = q.shape
-    t = ke.shape[1]
     scale = 1.0 / math.sqrt(dh)
     scores = jnp.einsum("bshd,bthd->bhst", q, ke).astype(jnp.float32) * scale
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)

@@ -10,12 +10,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.parallel.sharding import constrain
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,17 +11,14 @@ Public surface used by the launcher, dry-run, tests and benchmarks:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import transformer as tf
-from repro.models.common import (
-    Spec, cross_entropy, init_params, logical_axes, param_count,
-    rms_norm, shape_structs, sinusoidal_pos_embed, zeros_params,
-)
+from repro.models.common import Spec, cross_entropy, init_params, param_count, rms_norm, sinusoidal_pos_embed, zeros_params
 from repro.parallel.sharding import constrain
 
 

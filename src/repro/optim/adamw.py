@@ -7,7 +7,7 @@ free. ``state_dtype=bfloat16`` halves optimizer HBM for >=100B archs
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -84,7 +84,7 @@ class PlasticityParams:
         if not (0.0 <= self.w_min < self.w_max <= 255.0):
             raise ValueError(
                 f"[w_min, w_max]=[{self.w_min}, {self.w_max}] must lie in the "
-                f"u8 register domain [0, 255]")
+                "u8 register domain [0, 255]")
 
     @staticmethod
     def make(

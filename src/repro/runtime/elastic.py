@@ -17,7 +17,7 @@ onto (2, 4) with identical values.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 
@@ -57,7 +57,6 @@ def plan_remesh(
     new_data = 1
     while new_data * 2 <= data_cap:
         new_data *= 2
-    new_sizes = dict(sizes)
     # shrink the first non-model axis (pod-major first if present)
     data_axes = [a for a in axis_names if a != model_axis]
     old_data = 1

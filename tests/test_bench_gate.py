@@ -1,0 +1,80 @@
+"""check_regression: the bench gate's comparison rules, unit-tested.
+
+The CI job proves the gate end-to-end; these pin the rule semantics so a
+refactor can't silently turn "any recompile increase fails" into a
+tolerance check.
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.check_regression import check_one  # noqa: E402
+
+
+BASE = {
+    "slot_ticks_per_s": 1000.0,
+    "recompiles": 0,
+    "n256_pallas_fused_exact": True,
+    "n256_batch": 16,          # ungated metadata
+    "_wall_s": 3.0,            # underscore keys are never gated
+}
+
+
+def test_within_tolerance_passes():
+    cur = dict(BASE, slot_ticks_per_s=800.0)
+    assert check_one("b", BASE, cur, tolerance=0.25) == []
+
+
+def test_rate_drop_beyond_tolerance_fails():
+    cur = dict(BASE, slot_ticks_per_s=700.0)
+    fails = check_one("b", BASE, cur, tolerance=0.25)
+    assert len(fails) == 1 and "slot_ticks_per_s" in fails[0]
+
+
+def test_rate_improvement_passes():
+    cur = dict(BASE, slot_ticks_per_s=5000.0)
+    assert check_one("b", BASE, cur, tolerance=0.25) == []
+
+
+def test_any_recompile_increase_fails_regardless_of_tolerance():
+    cur = dict(BASE, recompiles=1)
+    fails = check_one("b", BASE, cur, tolerance=0.99)
+    assert len(fails) == 1 and "recompiles" in fails[0]
+
+
+def test_exactness_regression_fails():
+    cur = dict(BASE, n256_pallas_fused_exact=False)
+    fails = check_one("b", BASE, cur, tolerance=0.25)
+    assert len(fails) == 1 and "exact" in fails[0]
+
+
+def test_missing_metric_fails():
+    cur = {k: v for k, v in BASE.items() if k != "recompiles"}
+    fails = check_one("b", BASE, cur, tolerance=0.25)
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_ungated_metadata_ignored():
+    cur = dict(BASE, n256_batch=999)       # changed, but not a gated key
+    del cur["_wall_s"]                     # underscore keys may vanish
+    assert check_one("b", BASE, cur, tolerance=0.25) == []
+
+
+def test_committed_baselines_parse_and_gate_something():
+    """The repo's own baselines must stay loadable and non-trivial."""
+    bdir = Path(__file__).resolve().parent.parent / "benchmarks" / "baselines"
+    files = sorted(bdir.glob("BENCH_*.json"))
+    assert files, "no committed baselines"
+    for f in files:
+        base = json.loads(f.read_text())
+        gated = [k for k in base
+                 if k.endswith("_per_s") or "recompile" in k
+                 or k.endswith("compiles") or k.endswith("_exact")]
+        assert gated, f"{f.name} gates nothing"
+        recompile_keys = [k for k in base
+                          if "recompile" in k or k.endswith("compiles")]
+        assert recompile_keys, f"{f.name} has no recompile pin"
+        assert all(base[k] == 0 for k in recompile_keys), (
+            f"{f.name} baselines a nonzero recompile count")

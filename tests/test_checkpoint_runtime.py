@@ -1,6 +1,5 @@
 """Checkpointing (atomic, rotated, async) + fault-tolerance runtime."""
 import os
-import time
 
 import jax
 import jax.numpy as jnp

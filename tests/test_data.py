@@ -2,7 +2,7 @@
 import numpy as np
 
 from repro.configs import get_bundle
-from repro.configs.base import SHAPES, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.data import iris, mnist, pipeline, synthetic
 
 

@@ -1,6 +1,4 @@
 """End-to-end driver tests: training loop (ckpt/resume) + wave serving."""
-import numpy as np
-import pytest
 
 import jax
 

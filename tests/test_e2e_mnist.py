@@ -1,7 +1,6 @@
 """End-to-end MNIST-8x8 (paper §III.B): binarize -> spikes -> train ->
 register download (the 74-neuron system) -> integer inference."""
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import get_bundle

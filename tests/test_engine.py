@@ -159,33 +159,43 @@ def _assert_trees_bitexact(a, b):
 
 # ---------------------------------------------------------------------------
 # Oracle equivalence: the engine wrappers ARE the seed scans, bit for bit.
+# Parametrized over backends: "pallas_fused" (the whole-tick megakernel, in
+# interpret mode on CPU -- same kernel body the TPU runs) must reproduce the
+# seed oracles bit for bit too, including per-synapse delays and refractory
+# masking.
 # ---------------------------------------------------------------------------
 
+BACKENDS = ["jnp", "pallas_fused"]
+
+
 class TestSeedEquivalence:
+    @pytest.mark.parametrize("backend", BACKENDS)
     @pytest.mark.parametrize("mode", ["fixed_leak", "euler"])
     @pytest.mark.parametrize("batch_shape", [(), (3,)])
-    def test_rollout_bitexact(self, mode, batch_shape):
+    def test_rollout_bitexact(self, mode, batch_shape, backend):
         n, ticks = 9, 12
         p = _params(n, connectivity.sparse_random(n, 0.5, seed=3))
         st0 = SNNState.zeros(batch_shape, n)
         ext = _ext(n, ticks, batch_shape)
         fin_o, ras_o = _seed_rollout(p, st0, ext, ticks, mode=mode)
-        fin_e, ras_e = rollout(p, st0, ext, ticks, mode=mode)
+        fin_e, ras_e = rollout(p, st0, ext, ticks, mode=mode, backend=backend)
         np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
         _assert_trees_bitexact(fin_o, fin_e)
 
-    def test_rollout_autonomous_bitexact(self):
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_rollout_autonomous_bitexact(self, backend):
         n = 6
         p = _params(n, connectivity.ring(n), v_th=0.5)
         st0 = SNNState.zeros((), n)
         st0 = dataclasses.replace(
             st0, lif=dataclasses.replace(st0.lif, y=jnp.ones((n,))))
         fin_o, ras_o = _seed_rollout(p, st0, None, 7)
-        fin_e, ras_e = rollout(p, st0, None, 7)
+        fin_e, ras_e = rollout(p, st0, None, 7, backend=backend)
         np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
         _assert_trees_bitexact(fin_o, fin_e)
 
-    def test_rollout_with_delays_bitexact(self):
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_rollout_with_delays_bitexact(self, backend):
         n, ticks, max_delay = 7, 14, 3
         rng = np.random.default_rng(5)
         c = connectivity.sparse_random(n, 0.6, seed=5)
@@ -195,12 +205,14 @@ class TestSeedEquivalence:
         st0 = SNNState.zeros((), n, max_delay=max_delay)
         ext = _ext(n, ticks, (), p=0.3, seed=6)
         fin_o, ras_o = _seed_rollout(p, st0, ext, ticks, delays=delays)
-        fin_e, ras_e = rollout(p, st0, ext, ticks, delays=delays)
+        fin_e, ras_e = rollout(p, st0, ext, ticks, delays=delays,
+                               backend=backend)
         np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
         _assert_trees_bitexact(fin_o, fin_e)
 
+    @pytest.mark.parametrize("backend", BACKENDS)
     @pytest.mark.parametrize("rule", ["stdp", "rstdp"])
-    def test_learning_rollout_bitexact(self, rule):
+    def test_learning_rollout_bitexact(self, rule, backend):
         n, ticks, b = 8, 10, 2
         c = connectivity.sparse_random(n, 0.6, seed=7)
         p = _params(n, c, v_th=1.0, w_scale=3.0)
@@ -217,12 +229,14 @@ class TestSeedEquivalence:
             plastic_c=plastic_c)
         (f2, p2, w2), r2 = learning_rollout(
             p, st0, pst0, ext, ticks, plasticity=pp, rewards=rewards,
-            plastic_c=plastic_c)
+            plastic_c=plastic_c, backend=backend,
+            plasticity_backend="jnp")
         np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
         np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
         _assert_trees_bitexact((f1, p1), (f2, p2))
 
-    def test_forward_layered_bitexact(self):
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_forward_layered_bitexact(self, backend):
         sizes = [4, 5, 3]
         n = sum(sizes)
         p = _params(n, connectivity.layered(sizes), v_th=0.5)
@@ -230,11 +244,12 @@ class TestSeedEquivalence:
             (np.random.default_rng(2).random((2, n)) < 0.5), jnp.float32)
         ras_o, fin_o = _seed_forward_layered(p, drive, sizes, n_ticks=6)
         ras_e, fin_e = forward_layered(p, drive, sizes, n_ticks=6,
-                                       time_major=False)
+                                       time_major=False, backend=backend)
         np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
         _assert_trees_bitexact(fin_o, fin_e)
 
-    def test_forward_layered_spike_train_bitexact(self):
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_forward_layered_spike_train_bitexact(self, backend):
         sizes = [3, 3]
         n = sum(sizes)
         ticks = 5
@@ -242,7 +257,7 @@ class TestSeedEquivalence:
         train = _ext(n, ticks, (), p=0.5, seed=4)
         ras_o, _ = _seed_forward_layered(p, train, sizes, n_ticks=ticks)
         ras_e, _ = forward_layered(p, train, sizes, n_ticks=ticks,
-                                   time_major=True)
+                                   time_major=True, backend=backend)
         np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
 
 

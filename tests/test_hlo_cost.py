@@ -5,7 +5,6 @@ body ONCE, so scanned programs need the corrected parse.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_cost

@@ -11,9 +11,7 @@ from hypothesis import given, settings
 
 from repro.core import connectivity
 from repro.core.lif import LIFParams
-from repro.core.network import (
-    SNNParams, SNNState, forward_layered, params_from_registers, rollout, step,
-)
+from repro.core.network import SNNParams, SNNState, forward_layered, params_from_registers, rollout
 from repro.core.registers import RegisterBank, WeightLayout
 from repro.core.surrogate import spike_surrogate
 

@@ -1,13 +1,11 @@
 """System-level invariants across the whole package."""
-import math
 
 import jax
-import pytest
 
 jax.config.update("jax_platform_name", "cpu")
 
 from repro.configs import ASSIGNED_ARCHS, get_bundle
-from repro.configs.base import SHAPES, applicable_shapes
+from repro.configs.base import applicable_shapes
 
 
 def test_assigned_configs_match_spec():
