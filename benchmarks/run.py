@@ -42,7 +42,7 @@ def main() -> None:
     results = {}
     failures = []
     for name, fn in benches:
-        t0 = time.time()
+        t0 = time.perf_counter()
         print(f"=== bench:{name} ===", flush=True)
         try:
             res = fn()
@@ -51,7 +51,10 @@ def main() -> None:
             failures.append(name)
             results[name] = {"_error": f"{type(e).__name__}: {e}"}
             continue
-        res["_wall_s"] = round(time.time() - t0, 2)
+        # perf_counter + 6 decimals: cost-model benches (e.g. uart) finish
+        # in well under 10 ms, which the old time.time()/round(_, 2) pair
+        # recorded as a flat (and wrong) 0.0.
+        res["_wall_s"] = round(time.perf_counter() - t0, 6)
         results[name] = res
         for k, v in res.items():
             print(f"  {k}: {v}")

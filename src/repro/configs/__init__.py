@@ -24,7 +24,8 @@ def get_bundle(name: str) -> ArchBundle:
             llama4_scout_17b_a16e, moonshot_v1_16b_a3b, qwen3_0_6b,
             starcoder2_15b, smollm_135m, smollm_360m, jamba_1_5_large_398b,
             llama_3_2_vision_90b, rwkv6_1_6b, musicgen_large,
-            iris_snn, mnist_snn, mnist_stdp, snn_64k, snn_fused, snn_serve,
+            iris_snn, mnist_snn, mnist_stdp, snn_64k, snn_event, snn_fused,
+            snn_serve,
         )
     if name not in _REGISTRY:
         raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
@@ -53,4 +54,5 @@ ASSIGNED_ARCHS = [
     "musicgen-large",
 ]
 
-SNN_ARCHS = ["iris-snn", "mnist-snn", "mnist-stdp", "snn-64k", "snn-fused", "snn"]
+SNN_ARCHS = ["iris-snn", "mnist-snn", "mnist-stdp", "snn-64k", "snn-event",
+             "snn-fused", "snn"]

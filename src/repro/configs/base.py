@@ -55,7 +55,9 @@ class ModelConfig:
     layer_sizes: Tuple[int, ...] = ()
     n_ticks: int = 4
     snn_mode: str = "fixed_leak"
-    snn_backend: str = "jnp"         # jnp | pallas | pallas_fused (TickEngine)
+    snn_backend: str = "jnp"         # jnp | pallas | pallas_fused | event (TickEngine)
+    snn_density: float = 0.5         # topology density for free-form fabrics
+    snn_rate: float = 0.1            # target input spike rate (event operating point)
     # numerics
     dtype: str = "bfloat16"
     # provenance

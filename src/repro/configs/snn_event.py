@@ -1,0 +1,51 @@
+"""Large sparse fabric served through event-driven dispatch.
+
+The paper's mux fabric routes *only* closed connections, and a silent
+neuron costs nothing -- the properties event-driven FPGA emulators
+(NeuroCoreX, arXiv:2506.14138; the low-end-FPGA framework,
+arXiv:2507.07284) build their whole datapath around.  The dense
+backends pay the full ``B*K*N`` masked matmul per tick regardless of
+activity; past ~4k neurons at realistic densities (<= 0.05) and rates
+(<= 0.05) that is >100x wasted work.  ``backend="event"``
+(:mod:`repro.kernels.event_dispatch` + the pure-jnp reference in
+:func:`repro.kernels.ops.event_synaptic_input`) gathers only spiking
+neurons' fan-out slices instead.  This bundle is the benchmark/serving
+shape for that operating point: `benchmarks/bench_snn_scale.py` runs
+its sparse sweep from these sizes and CI gates the resulting
+`BENCH_snn_scale.json` throughput/parity/recompile metrics.
+"""
+from repro.configs import register
+from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
+
+FULL = ModelConfig(
+    name="snn-event",
+    family="snn",
+    n_neurons=4096,          # the sparse operating point the dense backends
+    layer_sizes=(),          # can't reach economically (ISSUE 4 / ROADMAP)
+    n_ticks=32,
+    snn_mode="fixed_leak",
+    snn_backend="event",
+    snn_density=0.05,
+    snn_rate=0.05,
+    dtype="float32",
+    source="DESIGN.md §10 event dispatch of paper §II mux fabric",
+)
+
+SMOKE = ModelConfig(
+    name="snn-event-smoke",
+    family="snn",
+    n_neurons=1024,
+    layer_sizes=(),
+    n_ticks=16,
+    snn_mode="fixed_leak",
+    snn_backend="event",
+    snn_density=0.05,
+    snn_rate=0.05,
+    head_pad=1,
+    dtype="float32",
+)
+
+
+@register("snn-event")
+def bundle() -> ArchBundle:
+    return ArchBundle(model=FULL, smoke=SMOKE, parallel={"*": ParallelConfig()})

@@ -7,7 +7,7 @@ matmul, LIF, delay write as separate XLA/Pallas ops -- pays an HBM
 round-trip between every phase; ``backend="pallas_fused"``
 (`kernels/tick_fused.py`) runs the whole circuit in one kernel launch
 per tick. This bundle is the benchmark/serving shape for that backend:
-`benchmarks/bench_snn_scale.py` sweeps its sizes across all three
+`benchmarks/bench_snn_scale.py` sweeps its sizes across all four
 backends and CI gates on the resulting `BENCH_snn_scale.json`.
 """
 from repro.configs import register

@@ -10,10 +10,20 @@ the program (the paper's "no re-synthesis" property).
 
 Convention: ``C[n, m]`` routes *presynaptic* neuron ``n`` -> *postsynaptic*
 neuron ``m``, matching the paper's ``connection list[n][m]``.
+Dense ``C`` is the *semantic* format (and the register-bank wire format
+bit-packs it row-wise); the event-driven backend additionally wants a
+*compressed* view that only names the closed muxes.  Two builders below
+provide it: :func:`to_csr` (exact CSR triple, round-trips with
+:func:`csr_to_dense`) and :func:`padded_neighbors` /
+:func:`padded_fan_in` (fixed-width padded neighbor lists -- the
+TPU-friendly layout: every row padded to a common fan-out/fan-in cap so
+gathers stay static-shaped, with padding stats so callers can see what
+the cap costs).
 """
 from __future__ import annotations
 
-from typing import Sequence
+import dataclasses
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -98,3 +108,109 @@ def fan_in(c: np.ndarray) -> np.ndarray:
 
 def fan_out(c: np.ndarray) -> np.ndarray:
     return np.asarray(c).sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Compressed connectivity: CSR + padded neighbor lists (the event backend's
+# data layout -- only the *closed* muxes are named; silent rows cost nothing)
+# ---------------------------------------------------------------------------
+
+
+def to_csr(c: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Dense boolean ``C`` -> CSR ``(indptr, indices)`` over presynaptic rows.
+
+    ``indices[indptr[p]:indptr[p+1]]`` are the postsynaptic targets of
+    neuron ``p``, ascending.  Exact: :func:`csr_to_dense` round-trips.
+    """
+    validate(c)
+    n = c.shape[0]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(c.sum(axis=1), out=indptr[1:])
+    indices = np.nonzero(c)[1].astype(np.int32)
+    return indptr, indices
+
+
+def csr_to_dense(indptr: np.ndarray, indices: np.ndarray, n: int) -> np.ndarray:
+    """Inverse of :func:`to_csr`."""
+    c = np.zeros((n, n), dtype=np.bool_)
+    for p in range(n):
+        c[p, indices[indptr[p] : indptr[p + 1]]] = True
+    return c
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddedNeighbors:
+    """Fixed-width neighbor lists: row ``i`` of ``idx`` holds the (ascending)
+    neighbors of neuron ``i``, padded to ``cap`` entries; ``mask`` is 1.0 on
+    real entries and 0.0 on padding (padded ``idx`` entries are 0 and must be
+    gated by the mask before use).
+
+    ``axis`` records the direction: ``"out"`` (row i = fan-out targets of
+    presynaptic i, from :func:`padded_neighbors`) or ``"in"`` (row i =
+    fan-in sources of postsynaptic i, from :func:`padded_fan_in`).
+
+    The cap/padding trade-off the stats expose: a tight cap minimizes the
+    gather width (and the event backend's FLOPs/bytes), but the cap must
+    hold the *maximum* degree -- one hub row sets the width for everyone,
+    and ``padding_fraction`` says how much of the padded layout is air.
+    """
+
+    idx: np.ndarray          # (n, cap) int32
+    mask: np.ndarray         # (n, cap) float32, 1.0 = real edge
+    cap: int
+    axis: str                # "out" | "in"
+    n_edges: int
+    max_degree: int
+
+    @property
+    def mean_degree(self) -> float:
+        return self.n_edges / max(1, self.idx.shape[0])
+
+    @property
+    def padding_fraction(self) -> float:
+        """Fraction of the (n, cap) layout that is padding."""
+        slots = self.idx.shape[0] * self.cap
+        return 1.0 - self.n_edges / max(1, slots)
+
+
+def _padded_lists(c: np.ndarray, cap: Optional[int], axis: str) -> PaddedNeighbors:
+    validate(c)
+    rows = c if axis == "out" else c.T
+    degrees = rows.sum(axis=1).astype(np.int64)
+    max_deg = int(degrees.max()) if rows.size else 0
+    if cap is None:
+        cap = max(1, max_deg)
+    if max_deg > cap:
+        raise ValueError(
+            f"fan-{axis} cap {cap} below max degree {max_deg}: a capped "
+            "neighbor list would silently drop synapses (raise the cap or "
+            "prune the topology)")
+    n = rows.shape[0]
+    idx = np.zeros((n, cap), dtype=np.int32)
+    mask = np.zeros((n, cap), dtype=np.float32)
+    for i in range(n):
+        nz = np.nonzero(rows[i])[0]
+        idx[i, : nz.size] = nz
+        mask[i, : nz.size] = 1.0
+    return PaddedNeighbors(idx=idx, mask=mask, cap=int(cap), axis=axis,
+                           n_edges=int(degrees.sum()), max_degree=max_deg)
+
+
+def padded_neighbors(c: np.ndarray, cap: Optional[int] = None) -> PaddedNeighbors:
+    """Padded fan-OUT lists: row ``p`` = postsynaptic targets of ``p``.
+
+    ``cap=None`` picks the tightest cap (the max fan-out).  Raises if an
+    explicit cap is below the max degree -- the builders never truncate.
+    """
+    return _padded_lists(c, cap, "out")
+
+
+def padded_fan_in(c: np.ndarray, cap: Optional[int] = None) -> PaddedNeighbors:
+    """Padded fan-IN lists: row ``m`` = presynaptic sources of ``m``.
+
+    This is the gather-friendly dual of :func:`padded_neighbors`: the
+    event backend's vmap-safe path reads, for every postsynaptic neuron,
+    exactly its ``cap`` (mostly real) in-edges -- no scatter, no
+    data-dependent control flow, FLOPs ``B*n*cap`` instead of ``B*n*n``.
+    """
+    return _padded_lists(c, cap, "in")

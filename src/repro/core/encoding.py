@@ -61,10 +61,20 @@ def decode_spike_count(spikes: jax.Array, axis: int = 0) -> jax.Array:
     return jnp.argmax(spikes.sum(axis=axis), axis=-1)
 
 
-def decode_first_spike(spikes: jax.Array) -> jax.Array:
+def decode_first_spike(
+    spikes: jax.Array, v: jax.Array = None, *, silent: int = -1
+) -> jax.Array:
     """Class = first output neuron to spike (ties -> lower index).
 
     ``spikes`` has shape ``(T, ..., n_out)``.
+
+    All-silent rows (no output neuron ever spikes) used to decode to
+    class 0 silently: every ``first`` entry was ``n_ticks`` and argmin
+    returned the first index.  Now they fall back to
+    :func:`decode_potential` tie-breaking when the final membrane
+    potentials ``v`` (shape ``(..., n_out)``) are given, and otherwise
+    return the documented ``silent`` sentinel (default -1, never a valid
+    class) so callers can't mistake silence for a confident class-0.
     """
     t_axis = 0
     n_ticks = spikes.shape[t_axis]
@@ -73,7 +83,11 @@ def decode_first_spike(spikes: jax.Array) -> jax.Array:
     )
     first = jnp.where(spikes > 0, ticks, jnp.float32(n_ticks))
     first = first.min(axis=t_axis)
-    return jnp.argmin(first, axis=-1)
+    pred = jnp.argmin(first, axis=-1)
+    all_silent = first.min(axis=-1) >= n_ticks
+    fallback = decode_potential(v) if v is not None else jnp.asarray(
+        silent, pred.dtype)
+    return jnp.where(all_silent, fallback, pred)
 
 
 def decode_potential(v: jax.Array) -> jax.Array:

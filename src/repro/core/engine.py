@@ -17,8 +17,13 @@ Two structural invariants the engine owns:
   ``backend="pallas_fused"`` (the whole-tick megakernel: delay read,
   masked accumulation, LIF update, delay write in ONE ``pallas_call``,
   circular delay pointer scalar-prefetched -- see
-  :mod:`repro.kernels.tick_fused`) is decided in exactly one branch
-  inside the tick body -- no caller ever re-implements it.
+  :mod:`repro.kernels.tick_fused`) vs ``backend="event"`` (event-driven
+  sparse dispatch: only spiking neurons' fan-outs are gathered, the mux
+  fabric's silent-neurons-cost-nothing property -- see
+  :func:`repro.kernels.ops.event_lif_step`) is decided in exactly one
+  branch inside the tick body -- no caller ever re-implements it, and
+  delay rings, refractory state and the plasticity hook compose with
+  every backend unchanged.
 
 * **Loop-invariant mask hoisting.** For the frozen-weight path the
   masked matrix ``W*C`` is materialized once per rollout, *outside* the
@@ -70,14 +75,21 @@ class TickEngine:
 
     Attributes:
       mode: LIF formulation ("fixed_leak" | "euler" | "int").
-      surrogate: differentiable surrogate spike (training; jnp only).
-      backend: "jnp" (reference), "pallas" (fused matmul+LIF kernel) or
-        "pallas_fused" (whole-tick megakernel, one launch per tick).
+      surrogate: differentiable surrogate spike (training; jnp/event only).
+      backend: "jnp" (reference), "pallas" (fused matmul+LIF kernel),
+        "pallas_fused" (whole-tick megakernel, one launch per tick) or
+        "event" (event-driven sparse dispatch: gather only spiking
+        neurons' fan-outs -- the large-sparse-fabric backend).
       plasticity: optional :class:`~repro.plasticity.stdp.PlasticityParams`;
         when set *and* the carry holds weights, the plasticity hook runs
         after the delay-line write each tick.
       plasticity_backend: backend for the plasticity hook; defaults to
         following ``backend``.
+      event_k_active: spike-slot budget for the event backend's top-k
+        dispatch (None -> ``n // 8``, floored at 8); rows spiking past
+        it fall back to the dense product per ``event_overflow``.
+      event_overflow: "fallback" (dense product on overflow ticks,
+        exact at any rate), "strict" (checkify error) or "unchecked".
     """
 
     mode: str = "fixed_leak"
@@ -85,6 +97,8 @@ class TickEngine:
     backend: str = "jnp"
     plasticity: Optional[Any] = None
     plasticity_backend: Optional[str] = None
+    event_k_active: Optional[int] = None
+    event_overflow: str = "fallback"
 
     # -- the single tick body ---------------------------------------------
 
@@ -103,6 +117,7 @@ class TickEngine:
         delays: Optional[jax.Array] = None,
         plastic_c: Optional[jax.Array] = None,
         learn_until: Optional[jax.Array] = None,
+        neighbors: Optional[Any] = None,
     ) -> Tuple[TickCarry, jax.Array]:
         """One synchronous network tick:
 
@@ -121,6 +136,11 @@ class TickEngine:
             plasticity hook only commits weight/trace updates while
             ``tick < learn_until``. Serving uses this to stop learning at
             a request's tick budget without changing program shape.
+          neighbors: optional :class:`repro.kernels.ops.EventFanIn`
+            switching the ``"event"`` backend to its padded fan-in gather
+            path (no data-dependent control flow -- safe under ``vmap``,
+            which is how the multi-tenant server runs sparse tenants).
+            Ignored by the dense backends.
         """
         ext, reward = xs
         st = carry.state
@@ -165,6 +185,18 @@ class TickEngine:
                 lif_state = ops.fused_lif_step(
                     st.lif, arriving, p, ext,
                     mode=self.mode, surrogate=self.surrogate)
+            elif self.backend == "event":
+                # -- event-driven dispatch: only spiking neurons' fan-outs
+                #    are gathered (the mux fabric routes nothing for silent
+                #    neurons). ``wc`` is the hoisted matrix on the frozen
+                #    path and this tick's carry-derived matrix when learning.
+                from repro.kernels import ops  # local import; CPU path is jnp
+
+                lif_state = ops.event_lif_step(
+                    st.lif, arriving, params, ext, wc,
+                    k_active=self.event_k_active, fan_in=neighbors,
+                    overflow=self.event_overflow,
+                    mode=self.mode, surrogate=self.surrogate)
             else:
                 syn = arriving @ wc
                 if ext is not None:
@@ -173,6 +205,9 @@ class TickEngine:
                                      mode=self.mode, surrogate=self.surrogate)
         else:
             # -- per-synapse delays: synapse (pre,post) reads slot (tick - delay).
+            #    Like "pallas", the "event" backend composes with the matrix-
+            #    delay path through this reference einsum (per-delay history
+            #    planes defeat a single spike-list gather).
             def gather_delay(d):
                 idx = jnp.mod(slot - d, max_delay)
                 return jax.lax.dynamic_index_in_dim(
@@ -217,6 +252,8 @@ class TickEngine:
             pb = self.plasticity_backend or self.backend
             if pb == "pallas_fused":
                 pb = "pallas"  # the plasticity pass has no whole-tick variant
+            elif pb == "event":
+                pb = "jnp"     # STDP outer products are dense; no event pass
             pst2, w2 = plasticity_rules.plasticity_step(
                 carry.plast, st.lif.y, lif_state.y, w,
                 params.c if plastic_c is None else plastic_c,
@@ -243,6 +280,7 @@ class TickEngine:
         delays: Optional[jax.Array] = None,
         plastic_c: Optional[jax.Array] = None,
         learn_until: Optional[jax.Array] = None,
+        neighbors: Optional[Any] = None,
     ) -> Tuple[TickCarry, jax.Array]:
         """Scan ``n_ticks`` ticks of :meth:`tick_body`; returns
         ``(final_carry, raster)``.
@@ -261,7 +299,7 @@ class TickEngine:
         def body(carry, xs):
             return self.tick_body(carry, xs, params=params, wc=wc,
                                   delays=delays, plastic_c=plastic_c,
-                                  learn_until=learn_until)
+                                  learn_until=learn_until, neighbors=neighbors)
 
         if ext_seq is None and rewards is None:
             return jax.lax.scan(
@@ -283,10 +321,12 @@ class TickEngine:
         ext: Optional[jax.Array] = None,
         *,
         delays: Optional[jax.Array] = None,
+        neighbors: Optional[Any] = None,
     ) -> SNNState:
         """One frozen-weight tick (the public ``network.step`` semantics)."""
         carry, _ = self.tick_body(TickCarry(state=state), (ext, None),
-                                  params=params, delays=delays)
+                                  params=params, delays=delays,
+                                  neighbors=neighbors)
         return carry.state
 
     def rollout(
@@ -297,10 +337,11 @@ class TickEngine:
         n_ticks: int,
         *,
         delays: Optional[jax.Array] = None,
+        neighbors: Optional[Any] = None,
     ) -> Tuple[SNNState, jax.Array]:
         """Frozen-weight rollout; returns ``(final_state, raster)``."""
         final, raster = self.scan(params, TickCarry(state=state), ext_seq,
-                                  n_ticks, delays=delays)
+                                  n_ticks, delays=delays, neighbors=neighbors)
         return final.state, raster
 
     def learning_rollout(
@@ -314,6 +355,7 @@ class TickEngine:
         rewards: Optional[jax.Array] = None,
         plastic_c: Optional[jax.Array] = None,
         learn_until: Optional[jax.Array] = None,
+        neighbors: Optional[Any] = None,
     ) -> Tuple[Tuple[SNNState, Any, jax.Array], jax.Array]:
         """Learning rollout: the carry holds mutable weights; returns
         ``((final_state, final_plast_state, final_w), raster)``.
@@ -333,5 +375,5 @@ class TickEngine:
         carry0 = TickCarry(state=state, plast=plast_state, w=params.w)
         final, raster = self.scan(params, carry0, ext_seq, n_ticks,
                                   rewards=rewards, plastic_c=plastic_c,
-                                  learn_until=learn_until)
+                                  learn_until=learn_until, neighbors=neighbors)
         return (final.state, final.plast, final.w), raster

@@ -47,6 +47,7 @@ def step(
     surrogate: bool = False,
     delays: Optional[jax.Array] = None,
     backend: str = "jnp",
+    neighbors=None,
 ) -> SNNState:
     """One synchronous network tick.
 
@@ -57,12 +58,16 @@ def step(
         values in [1, max_delay]. With delays, presynaptic spikes are
         written into the delay line and each synapse reads the slot its
         delay points at.
-      backend: "jnp" (reference), "pallas" (fused matmul+LIF kernel) or
+      backend: "jnp" (reference), "pallas" (fused matmul+LIF kernel),
         "pallas_fused" (whole-tick megakernel -- one launch per tick,
-        delay pointer scalar-prefetched; :mod:`repro.kernels.tick_fused`).
+        delay pointer scalar-prefetched; :mod:`repro.kernels.tick_fused`)
+        or "event" (event-driven sparse dispatch -- only spiking neurons'
+        fan-outs are gathered; :func:`repro.kernels.ops.event_lif_step`).
+      neighbors: optional :class:`repro.kernels.ops.EventFanIn` switching
+        the "event" backend to its vmap-safe padded fan-in gather path.
     """
     eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend)
-    return eng.tick(state, params, ext, delays=delays)
+    return eng.tick(state, params, ext, delays=delays, neighbors=neighbors)
 
 
 def rollout(
@@ -75,15 +80,18 @@ def rollout(
     surrogate: bool = False,
     delays: Optional[jax.Array] = None,
     backend: str = "jnp",
+    neighbors=None,
 ) -> Tuple[SNNState, jax.Array]:
     """Scan ``n_ticks`` network ticks; returns final state + spike raster.
 
     ``ext_seq`` is ``(n_ticks, ..., n_in)`` or None (autonomous dynamics).
     The raster has shape ``(n_ticks, ..., n)``. The masked matrix ``W*C``
     is hoisted out of the scan (loop-invariant for frozen weights).
+    ``backend``/``neighbors``: see :func:`step`.
     """
     eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend)
-    return eng.rollout(params, state, ext_seq, n_ticks, delays=delays)
+    return eng.rollout(params, state, ext_seq, n_ticks, delays=delays,
+                       neighbors=neighbors)
 
 
 def learning_rollout(
@@ -99,6 +107,7 @@ def learning_rollout(
     mode: str = "fixed_leak",
     backend: str = "jnp",
     plasticity_backend: Optional[str] = None,
+    neighbors=None,
 ) -> Tuple[Tuple[SNNState, "object", jax.Array], jax.Array]:
     """Scan ``n_ticks`` *learning* ticks: the carry holds mutable weights.
 
@@ -123,10 +132,12 @@ def learning_rollout(
         routed synapse learns).  Pass a sub-mask to freeze part of the
         fabric -- e.g. a fixed inhibitory winner-take-all block stays
         bit-identical while the feed-forward block learns.
-      backend / plasticity_backend: "jnp", "pallas" or "pallas_fused";
-        the plasticity backend defaults to following ``backend``
-        ("pallas_fused" maps to the "pallas" plasticity pass -- the
-        learning hook always runs outside the tick kernel).
+      backend / plasticity_backend: "jnp", "pallas", "pallas_fused" or
+        "event"; the plasticity backend defaults to following ``backend``
+        ("pallas_fused" maps to the "pallas" plasticity pass, "event" to
+        "jnp" -- the learning hook always runs outside the tick kernel).
+      neighbors: optional :class:`repro.kernels.ops.EventFanIn` for the
+        "event" backend's vmap-safe fan-in gather path.
 
     Returns:
       ``((final_state, final_plast_state, final_w), raster)``.
@@ -134,7 +145,8 @@ def learning_rollout(
     eng = TickEngine(mode=mode, backend=backend, plasticity=plasticity,
                      plasticity_backend=plasticity_backend)
     return eng.learning_rollout(params, state, plast_state, ext_seq, n_ticks,
-                                rewards=rewards, plastic_c=plastic_c)
+                                rewards=rewards, plastic_c=plastic_c,
+                                neighbors=neighbors)
 
 
 def forward_layered(

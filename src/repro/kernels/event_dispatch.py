@@ -1,0 +1,185 @@
+"""Event-driven dispatch kernel: gather spiking fan-outs, accumulate, LIF.
+
+The paper's mux fabric routes *only* closed connections, and a silent
+neuron costs nothing -- its muxes simply never fire.  The dense kernels
+(:mod:`lif_step`, :mod:`tick_fused`) pay the full ``B*K*N`` masked
+matmul per tick regardless of activity; at the sparse operating point
+the ROADMAP cares about (large n, density <= 0.05, rate <= 0.05) almost
+all of that work multiplies zeros.  This kernel is the TPU restatement
+of event dispatch: per batch row, only the (at most ``k_active``)
+*spiking* presynaptic neurons' fan-out slices are ever gathered out of
+HBM, and they are scatter-accumulated into the synaptic-input tile in
+VMEM before the shared LIF epilogue runs in VREGs.
+
+Structure (grid ``(B, N/bN, k_active)``, the k axis walking the spike
+list):
+
+* **Spike indices ride in as scalar prefetch.**  The caller
+  (:func:`repro.kernels.ops.event_lif_step`) extracts the spiking row
+  ids with a tie-stable ``top_k`` -- ascending presynaptic order, so the
+  accumulation visits contributions in the same order as the dense
+  product and stays bit-compatible with the jnp reference.  The ids are
+  *runtime data* in SMEM: the weight operand's index map reads
+  ``idx_ref[b, k]`` and the pipeline DMAs exactly the one ``(1, bN)``
+  fan-out slice that spike needs.  Empty spike slots point at a
+  sentinel all-zero row appended to the weight matrix, so padding
+  contributes nothing without any branch in the kernel body.
+* **Scatter-accumulate in VMEM.**  ``acc += w[idx[b, k]]`` -- the
+  gathered fan-out slice lands in the f32 accumulator tile; across the
+  k grid steps this is the scatter of every active synapse into its
+  postsynaptic neuron's input, at ``B*k_active*N`` adds instead of the
+  dense ``B*K*N`` MACs.  Spikes are binary (the emitted raster), so no
+  value multiply is needed.
+* **Shared LIF epilogue.**  The last k step runs
+  :func:`repro.kernels.lif_step._lif_epilogue` -- the identical
+  threshold/leak/reset/refractory math every other backend uses.
+
+Overflow (a batch row spiking more than ``k_active`` times) is handled
+by the caller, not here: the bridge detects it and falls back to the
+dense fused kernel (or raises under checkify), so truncation can never
+silently drop spikes.  All shapes must be pre-padded to block multiples
+on the N axis by the caller.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+from repro.kernels.lif_step import _lif_epilogue
+
+DEFAULT_BLOCK_N = 128
+
+
+def _event_kernel(
+    idx_ref,            # (B, k) i32 in SMEM: spiking row ids (sentinel-padded)
+    *refs,
+    mode: str,
+    has_drive: bool,
+):
+    """One grid step: accumulate one spike's fan-out slice; LIF on the last."""
+    it = iter(refs)
+    w_ref = next(it)
+    v_ref = next(it)
+    r_in_ref = next(it)
+    drive_ref = next(it) if has_drive else None
+    vth_ref, leak_ref, rref_ref, gain_ref, ibias_ref, vreset_ref = (
+        next(it), next(it), next(it), next(it), next(it), next(it))
+    v_out_ref, r_out_ref, y_out_ref = next(it), next(it), next(it)
+    acc_ref = next(it)
+
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # The index map already steered the DMA to row idx_ref[b, k]: this IS
+    # the event dispatch -- one spiking neuron's fan-out lands on its
+    # postsynaptic tile. Sentinel slots gathered an all-zero row.
+    acc_ref[...] += w_ref[...].astype(jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        v = v_ref[...].astype(jnp.float32)
+        r = r_in_ref[...]
+        drive = drive_ref[...].astype(jnp.float32) if has_drive else None
+        v_new, r_new, spiked = _lif_epilogue(
+            acc_ref[...], v, r, drive,
+            vth_ref[...].astype(jnp.float32),
+            leak_ref[...].astype(jnp.float32),
+            rref_ref[...],
+            gain_ref[...].astype(jnp.float32),
+            ibias_ref[...].astype(jnp.float32),
+            vreset_ref[...].astype(jnp.float32),
+            mode,
+        )
+        v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+        r_out_ref[...] = r_new.astype(r_out_ref.dtype)
+        y_out_ref[...] = spiked.astype(y_out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_n", "interpret"),
+)
+def event_lif_dispatch(
+    idx: jax.Array,
+    w: jax.Array,
+    v: jax.Array,
+    r: jax.Array,
+    drive: Optional[jax.Array],
+    v_th: jax.Array,
+    leak: jax.Array,
+    r_ref: jax.Array,
+    gain: jax.Array,
+    i_bias: jax.Array,
+    v_reset: jax.Array,
+    *,
+    mode: str = "fixed_leak",
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Event tick as a single ``pallas_call``.
+
+    Shapes (N pre-padded to ``block_n`` multiples):
+
+    * ``idx``: (B, k_active) i32 -- spiking presynaptic row ids, ascending,
+      padded with the sentinel ``K`` (scalar prefetch).
+    * ``w``: (K + 1, N) effective weights ``W*C`` with an all-zero sentinel
+      row appended at index ``K``.
+    * ``v``/``drive``: (B, N) f32; ``r``: (B, N) i32; params: (N,).
+
+    Returns ``(v', r', y')`` each (B, N).
+    """
+    B, k_active = idx.shape
+    N = w.shape[1]
+    if N % block_n:
+        raise ValueError(f"N={N} must be a multiple of block_n={block_n}")
+    if mode not in ("fixed_leak", "euler"):
+        raise ValueError(f"event dispatch supports fixed_leak|euler, got {mode!r}")
+    has_drive = drive is not None
+
+    grid = (B, N // block_n, k_active)
+    # The scalar-prefetched spike list steers the DMA: only spiking rows'
+    # fan-out slices ever leave HBM.
+    w_spec = pl.BlockSpec((1, block_n), lambda b, j, k, s: (s[b, k], j))
+    bspec = pl.BlockSpec((1, block_n), lambda b, j, k, s: (b, j))
+    pspec = pl.BlockSpec((1, block_n), lambda b, j, k, s: (0, j))
+
+    in_specs = [w_spec, bspec, bspec]
+    inputs = [w, v, r]
+    if has_drive:
+        in_specs.append(bspec)
+        inputs.append(drive)
+    row = lambda a: a.reshape(1, N)
+    in_specs += [pspec] * 6
+    inputs += [row(v_th), row(leak), row(r_ref), row(gain), row(i_bias),
+               row(v_reset)]
+
+    kernel = functools.partial(_event_kernel, mode=mode, has_drive=has_drive)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[bspec, bspec, bspec],
+        scratch_shapes=[pltpu.VMEM((1, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N), v.dtype),
+            jax.ShapeDtypeStruct((B, N), r.dtype),
+            jax.ShapeDtypeStruct((B, N), v.dtype),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), *inputs)

@@ -6,6 +6,7 @@ bridge to :mod:`repro.core` state dataclasses.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Tuple
 
@@ -345,26 +346,249 @@ def fused_lif_step_slots(
     return jax.vmap(f)(lif_state, spikes, params, ext)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EventFanIn:
+    """Device-side padded fan-in lists (the event backend's gather layout).
+
+    ``idx[m, j]`` is the j-th presynaptic source of postsynaptic neuron
+    ``m`` (ascending, 0-padded); ``mask`` gates padding to 0.  Built once
+    per topology from :func:`repro.core.connectivity.padded_fan_in` via
+    :meth:`from_padded` -- like the connection list itself it is runtime
+    *data*, so swapping topologies of equal cap never retraces.
+    """
+
+    idx: jax.Array           # (n, cap) int32
+    mask: jax.Array          # (n, cap) float32
+
+    @classmethod
+    def from_padded(cls, nbrs) -> "EventFanIn":
+        if nbrs.axis != "in":
+            raise ValueError(
+                f"EventFanIn needs fan-in lists (axis='in'), got {nbrs.axis!r}")
+        return cls(idx=jnp.asarray(nbrs.idx, jnp.int32),
+                   mask=jnp.asarray(nbrs.mask, jnp.float32))
+
+    @classmethod
+    def from_dense(cls, c, cap: Optional[int] = None) -> "EventFanIn":
+        from repro.core import connectivity
+        import numpy as np
+
+        return cls.from_padded(
+            connectivity.padded_fan_in(np.asarray(c) > 0, cap))
+
+
+def default_k_active(n: int) -> int:
+    """Default spike-slot budget for the top-k event path: n/8, floored at 8
+    (matches the bench cost model's ``2*rate*n`` at rate ~0.06)."""
+    return min(n, max(8, n // 8))
+
+
+def event_synaptic_input(
+    s: jax.Array,
+    wc: jax.Array,
+    *,
+    k_active: Optional[int] = None,
+    fan_in: Optional[EventFanIn] = None,
+    overflow: str = "fallback",
+) -> jax.Array:
+    """Event-driven synaptic input: the pure-jnp reference the ``"event"``
+    backend and the Pallas dispatch kernel both answer to.
+
+    Two dispatch strategies, both exploiting what the paper's mux fabric
+    exploits (an open mux routes nothing; a silent neuron costs nothing):
+
+    * **top-k spike gather** (default): select the (at most ``k_active``)
+      spiking presynaptic rows per batch element, gather their fan-out
+      slices of ``wc`` and reduce -- ``B*k_active*N`` FLOPs instead of
+      ``B*K*N``.  ``jax.lax.top_k`` is tie-stable, so the gathered rows
+      come out in ascending presynaptic order and the reduction sums the
+      same nonzero terms in the same order as the dense product.
+    * **fan-in gather** (``fan_in`` given): for every postsynaptic neuron
+      read exactly its padded in-edge list -- ``B*N*cap`` FLOPs, no
+      data-dependent control flow at all (safe under ``vmap``, which is
+      how the multi-tenant server runs it).
+
+    Args:
+      s: ``(..., K)`` presynaptic spikes in {0, 1}.
+      wc: ``(K, N)`` pre-masked effective matrix ``W*C``.
+      k_active: spike-slot budget for the top-k path (None -> ``K//8``,
+        floored at 8).  Ignored when ``fan_in`` is given.
+      fan_in: optional :class:`EventFanIn` switching to the gather path.
+      overflow: what the top-k path does when some batch row spikes more
+        than ``k_active`` times (where truncation would silently drop real
+        spikes -- the bug this argument exists to kill):
+
+        * ``"fallback"`` (default): detect ``s.sum(-1) > k_active`` and
+          compute the dense product instead -- exact at any rate, and the
+          scalar ``lax.cond`` only pays for the dense branch on ticks
+          that overflow (outside ``vmap``).
+        * ``"strict"``: fail under :mod:`jax.experimental.checkify`
+          instead of falling back (run the caller through
+          ``checkify.checkify`` to surface the error).
+        * ``"unchecked"``: no detection -- caller guarantees the rate.
+    """
+    K = s.shape[-1]
+    if fan_in is not None:
+        # Gather path: s[..., idx] is (..., N, cap); the per-edge weights
+        # wc[idx[m, j], m] come straight off the dense matrix, so the same
+        # call serves frozen (hoisted wc) and learning (per-tick wc) paths.
+        n = wc.shape[1]
+        w_edges = wc[fan_in.idx, jnp.arange(n)[:, None]] * fan_in.mask
+        gathered = s[..., fan_in.idx]                       # (..., n, cap)
+        return jnp.einsum("...nc,nc->...n", gathered.astype(jnp.float32),
+                          w_edges.astype(jnp.float32))
+
+    if k_active is None:
+        k_active = default_k_active(K)
+    k_active = min(k_active, K)
+
+    def dense(sv):
+        return sv.astype(jnp.float32) @ wc.astype(jnp.float32)
+
+    def event(sv):
+        # Top-k by spike value (1.0 beats 0.0); ties broken by lower index,
+        # so spiking rows arrive in ascending presynaptic order.
+        vals, idx = jax.lax.top_k(sv, k_active)             # (..., k)
+        rows = jnp.take(wc, idx, axis=0)                    # (..., k, N)
+        return jnp.einsum("...k,...kn->...n", vals.astype(jnp.float32),
+                          rows.astype(jnp.float32))
+
+    if overflow == "unchecked":
+        return event(s)
+    n_spiking = jnp.sum(s > 0, axis=-1)
+    over = jnp.any(n_spiking > k_active)
+    if overflow == "strict":
+        from jax.experimental import checkify
+
+        checkify.check(
+            jnp.logical_not(over),
+            "event dispatch overflow: {m} spiking rows > k_active={k}",
+            m=jnp.max(n_spiking), k=jnp.asarray(k_active))
+        return event(s)
+    if overflow != "fallback":
+        raise ValueError(f"unknown overflow mode {overflow!r}")
+    return jax.lax.cond(over, dense, event, s)
+
+
 def event_spike_matmul(
-    s: jax.Array, w: jax.Array, c: jax.Array, *, k_active: int
+    s: jax.Array, w: jax.Array, c: jax.Array, *, k_active: int,
+    overflow: str = "fallback",
 ) -> jax.Array:
     """Beyond-paper event-driven dispatch (pure JAX, MXU-friendly).
 
     Instead of the dense (B,K)x(K,N) product, gather the fan-out rows of at
     most ``k_active`` spiking presynaptic neurons per batch row and reduce:
     FLOPs drop from ``B*K*N`` to ``B*k_active*N`` -- the TPU analogue of the
-    paper's mux fabric *not even routing* silent neurons. Exact whenever the
-    per-row spike count <= k_active (guaranteed by construction at low rates;
-    validated against the dense oracle in tests).
+    paper's mux fabric *not even routing* silent neurons.
+
+    Exact at *any* rate: rows with more than ``k_active`` spikes used to be
+    silently truncated by the top-k (dropping real spikes and returning a
+    wrong synaptic input); the overflow is now detected and falls back to
+    the dense product (or raises -- ``overflow="strict"`` under checkify).
+    See :func:`event_synaptic_input` for the modes.
     """
-    B, K = s.shape
     wc = w * c.astype(w.dtype)
-    # Top-k by spike value (1.0 beats 0.0); ties broken by index -- fine,
-    # since any selected silent neuron contributes s=0 anyway.
-    vals, idx = jax.lax.top_k(s, k_active)                    # (B, k)
-    rows = jnp.take(wc, idx.reshape(-1), axis=0)              # (B*k, N)
-    rows = rows.reshape(B, k_active, -1)
-    return jnp.einsum("bk,bkn->bn", vals.astype(jnp.float32), rows.astype(jnp.float32))
+    return event_synaptic_input(s, wc, k_active=k_active, overflow=overflow)
+
+
+def event_lif_step(
+    lif_state: LIFState,
+    spikes: jax.Array,
+    params,  # SNNParams (avoids circular import in annotations)
+    ext: Optional[jax.Array],
+    wc: jax.Array,
+    *,
+    k_active: Optional[int] = None,
+    fan_in: Optional[EventFanIn] = None,
+    overflow: str = "fallback",
+    mode: str = "fixed_leak",
+    surrogate: bool = False,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+) -> LIFState:
+    """State-level bridge for ``TickEngine(backend="event")``.
+
+    On TPU the top-k path lowers to the Pallas event-dispatch kernel
+    (:mod:`repro.kernels.event_dispatch`): spike indices ride in as scalar
+    prefetch and only the spiking rows' fan-out slices ever leave HBM.  On
+    CPU (and for the fan-in gather / surrogate paths) the pure-jnp
+    reference above *is* the implementation -- XLA already executes the
+    gathers natively, so interpret-mode emulation would only add overhead.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu() and fan_in is None and not surrogate
+    if use_kernel:
+        from repro.kernels import event_dispatch as _ev_kernel
+
+        if surrogate:
+            raise ValueError(
+                "event kernel path is inference-only; use the jnp path to train")
+        batch_shape = lif_state.v.shape[:-1]
+        n = lif_state.v.shape[-1]
+        flat = lambda a: a.reshape((-1, a.shape[-1]))
+        s = flat(spikes)
+        B, K = s.shape
+        k = min(k_active or default_k_active(K), K)
+        drive = None
+        if ext is not None:
+            drive = flat(ext) @ params.w_in
+        vals, idx = jax.lax.top_k(s, k)
+        # Padded slots point at the sentinel zero row appended below.
+        idx = jnp.where(vals > 0, idx, K).astype(jnp.int32)
+        bn = _pick_block(n, _ev_kernel.DEFAULT_BLOCK_N, 128)
+        pad_n = lambda a, v=0: _pad_to(a, a.ndim - 1, bn, value=v)
+        wc_p = pad_n(jnp.concatenate(
+            [wc, jnp.zeros((1, wc.shape[1]), wc.dtype)], axis=0))
+        v_p = pad_n(flat(lif_state.v))
+        r_p = pad_n(flat(lif_state.r), 1)   # padded neurons: refractory lock
+        drive_p = None if drive is None else pad_n(drive)
+        big = jnp.finfo(jnp.float32).max / 2
+        lp = params.lif
+
+        def event(_):
+            v_new, r_new, y = _ev_kernel.event_lif_dispatch(
+                idx, wc_p, v_p, r_p, drive_p,
+                _pad_to(lp.v_th, 0, bn, value=big), _pad_to(lp.leak, 0, bn),
+                _pad_to(lp.r_ref, 0, bn), _pad_to(lp.gain, 0, bn),
+                _pad_to(lp.i_bias, 0, bn), _pad_to(lp.v_reset, 0, bn),
+                mode=mode, block_n=bn,
+                interpret=not _on_tpu() if interpret is None else interpret,
+            )
+            return v_new[:, :n], r_new[:, :n], y[:, :n]
+
+        n_spiking = jnp.sum(s > 0, axis=-1)
+        if overflow == "fallback":
+            # The kernel's k slots truncate past k_active; overflow ticks
+            # take the dense fused kernel instead (exact at any rate).
+            def dense(_):
+                return fused_lif_step_arrays(
+                    s, wc, jnp.ones_like(wc), flat(lif_state.v),
+                    flat(lif_state.r), drive, lp.v_th, lp.leak, lp.r_ref,
+                    lp.gain, lp.i_bias, lp.v_reset,
+                    mode=mode, interpret=interpret)
+
+            v_new, r_new, y = jax.lax.cond(
+                jnp.any(n_spiking > k), dense, event, 0)
+        else:
+            if overflow == "strict":
+                from jax.experimental import checkify
+
+                checkify.check(
+                    jnp.logical_not(jnp.any(n_spiking > k)),
+                    "event dispatch overflow: {m} spiking rows > k_active={k}",
+                    m=jnp.max(n_spiking), k=jnp.asarray(k))
+            v_new, r_new, y = event(0)
+        unflat = lambda a: a.reshape(batch_shape + (n,))
+        return LIFState(v=unflat(v_new), r=unflat(r_new), y=unflat(y))
+
+    from repro.core.lif import lif_step
+
+    syn = event_synaptic_input(spikes, wc, k_active=k_active, fan_in=fan_in,
+                               overflow=overflow)
+    if ext is not None:
+        syn = syn + ext @ params.w_in
+    return lif_step(lif_state, syn, params.lif, mode=mode, surrogate=surrogate)
 
 
 # Re-export oracles for test convenience.

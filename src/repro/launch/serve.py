@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional
 
@@ -162,6 +163,13 @@ class Tenant:
     connection/plastic mask (can never learn). ``plastic_c`` gates the
     learning hook per synapse: all-zero for frozen tenants, so their
     weights come back *bit-identical* from every wave.
+
+    ``backend`` is the tick program this tenant rides: the server's
+    default, or ``"event"`` when the tenant's topology is sparse enough
+    to clear the server's ``event_density`` threshold (then ``fan_idx``
+    / ``fan_mask`` hold its padded fan-in lists, fabric-shaped
+    ``(n_max, event_cap)`` so every event-wave slot stacks to one static
+    shape).
     """
 
     name: str
@@ -171,6 +179,10 @@ class Tenant:
     plastic: bool
     params: "object"            # repro.core.network.SNNParams, padded
     plastic_c: jax.Array        # (n_max, n_max)
+    density: float = 1.0
+    backend: str = "jnp"
+    fan_idx: Optional[jax.Array] = None   # (n_max, event_cap) i32
+    fan_mask: Optional[jax.Array] = None  # (n_max, event_cap) f32
 
 
 @dataclasses.dataclass
@@ -230,21 +242,54 @@ class SNNServer:
 
     def __init__(self, *, n_max: int, slots: int = 8, max_ticks: int = 32,
                  mode: str = "fixed_leak", backend: str = "jnp",
-                 plasticity=None):
+                 plasticity=None, event_density: Optional[float] = None,
+                 event_cap: Optional[int] = None):
+        """Args (beyond the obvious):
+
+        backend: the default tick backend every tenant rides.
+        event_density: when set, tenants whose topology density is at or
+          below it (and whose max in-degree fits ``event_cap``) are served
+          through a second resident program with ``backend="event"`` --
+          the sparse tenants pick event dispatch per slot, dense tenants
+          keep the default program.  None disables the event program.
+        event_cap: fan-in cap (static shape) of the event program's padded
+          neighbor lists; defaults to ``n_max // 4``.  One cap for the
+          whole server keeps the event wave's shapes static, so tenant
+          swaps never retrace (a tenant whose in-degree exceeds the cap
+          simply stays on the dense program -- never truncated).
+        """
         from repro.core.engine import TickEngine
         from repro.plasticity import PlasticityParams
 
         self.n_max = int(n_max)
         self.slots = int(slots)
         self.max_ticks = int(max_ticks)
+        self.backend = backend
+        self.event_density = event_density
+        self.event_cap = int(event_cap or max(1, n_max // 4))
         if plasticity is None:
             plasticity = PlasticityParams.make(
                 "stdp", a_plus=0.5, a_minus=0.25, w_min=0.0, w_max=255.0)
-        self.engine = TickEngine(mode=mode, backend=backend,
-                                 plasticity=plasticity)
+        self._mk_engine = lambda b: TickEngine(mode=mode, backend=b,
+                                               plasticity=plasticity)
+        self.engine = self._mk_engine(backend)
+        self._engines = {backend: self.engine}
         self.tenants: Dict[str, Tenant] = {}
-        self.compiles = 0          # incremented at TRACE time only
-        self._run = jax.jit(self._wave_fn)
+        self._compiles: Dict[str, int] = {}   # per-program, TRACE time only
+        self._runs: Dict[str, object] = {}
+
+    @property
+    def compiles(self) -> int:
+        """Total trace count across the server's resident programs (one
+        per backend in use; tenant/slot churn must never add to it)."""
+        return sum(self._compiles.values())
+
+    def _run_for(self, backend: str):
+        if backend not in self._runs:
+            self._engines.setdefault(backend, self._mk_engine(backend))
+            self._runs[backend] = jax.jit(
+                functools.partial(self._wave_fn, backend))
+        return self._runs[backend]
 
     # -- tenant registry ---------------------------------------------------
 
@@ -271,37 +316,62 @@ class SNNServer:
                 f"[1, {n}] (the tenant's live neuron count)")
         padded = pad_tenant_params(params, self.n_max)
         plastic_c = padded.c if plastic else jnp.zeros_like(padded.c)
+        density = float(np.asarray(params.c).sum()) / max(1, n * n)
+        backend, fan_idx, fan_mask = self.backend, None, None
+        if self.event_density is not None and density <= self.event_density:
+            from repro.core import connectivity
+
+            c_np = np.asarray(padded.c) > 0
+            if int(connectivity.fan_in(c_np).max()) <= self.event_cap:
+                # Sparse tenant: ride the event program. Fan-in lists are
+                # built at the shared cap so every event slot stacks to
+                # one static shape (no retrace on tenant swap).
+                nbrs = connectivity.padded_fan_in(c_np, cap=self.event_cap)
+                backend = "event"
+                fan_idx = jnp.asarray(nbrs.idx, jnp.int32)
+                fan_mask = jnp.asarray(nbrs.mask, jnp.float32)
         t = Tenant(name=name, n=n, n_in=n_in, n_out=n_out, plastic=plastic,
-                   params=padded, plastic_c=plastic_c)
+                   params=padded, plastic_c=plastic_c, density=density,
+                   backend=backend, fan_idx=fan_idx, fan_mask=fan_mask)
         self.tenants[name] = t
         return t
 
     # -- the one compiled program -----------------------------------------
 
-    def _wave_fn(self, params, ext_seq, plastic_c, rewards, budget):
+    def _wave_fn(self, backend, params, ext_seq, plastic_c, rewards, budget,
+                 fan_idx=None, fan_mask=None):
         """(slot-batched params, (S,T,N) ext, (S,N,N) mask, (S,T) rewards,
-        (S,) budgets) -> ((S,N) masked spike counts, (S,N,N) new weights).
+        (S,) budgets[, (S,N,cap) fan-in lists]) -> ((S,N) masked spike
+        counts, (S,N,N) new weights).
 
         The per-slot budget gates BOTH the rate decode (ticks >= budget
         don't count) and the plasticity hook (``learn_until``): a request
         never learns past its own tick budget, so the persisted weights
-        don't depend on the server's ``max_ticks`` ceiling."""
+        don't depend on the server's ``max_ticks`` ceiling.
+
+        Event waves vmap the engine's fan-in gather path -- pure gathers,
+        no data-dependent control flow, so the slot axis lowers exactly
+        like the dense program's."""
         from repro.core.network import SNNState
         from repro.plasticity import PlasticityState
 
-        self.compiles += 1  # trace-time side effect == compile counter
+        self._compiles[backend] = self._compiles.get(backend, 0) + 1
         T, N = self.max_ticks, self.n_max
+        engine = self._engines[backend]
 
-        def per_slot(p, ext, pc, rew, until):
+        def per_slot(p, ext, pc, rew, until, fi, fm):
+            from repro.kernels.ops import EventFanIn
+
             st = SNNState.zeros((), N)
             pst = PlasticityState.zeros((), N)
-            (_, _, w2), raster = self.engine.learning_rollout(
+            nbrs = None if fi is None else EventFanIn(idx=fi, mask=fm)
+            (_, _, w2), raster = engine.learning_rollout(
                 p, st, pst, ext, T, rewards=rew, plastic_c=pc,
-                learn_until=until)
+                learn_until=until, neighbors=nbrs)
             return raster, w2                      # (T, N), (N, N)
 
         raster, w2 = jax.vmap(per_slot)(params, ext_seq, plastic_c, rewards,
-                                        budget)
+                                        budget, fan_idx, fan_mask)
         # Per-request tick budgets: runtime masks, not shapes.
         tmask = (jnp.arange(T)[None, :] < budget[:, None]).astype(raster.dtype)
         counts = (raster * tmask[:, :, None]).sum(axis=1)   # (S, N) rate code
@@ -324,12 +394,27 @@ class SNNServer:
             if r.rewards is not None:
                 rew[i, : min(len(r.rewards), T)] = r.rewards[:T]
             budget[i] = 0 if r.rid < 0 else min(r.n_ticks, T)
-        return params, jnp.asarray(ext), plastic_c, jnp.asarray(rew), jnp.asarray(budget)
+        args = (params, jnp.asarray(ext), plastic_c, jnp.asarray(rew),
+                jnp.asarray(budget))
+        backends = {self.tenants[r.tenant].backend for r in reqs}
+        if backends != {"event"}:
+            return args + (None, None)
+        fan_idx = jnp.stack([self.tenants[r.tenant].fan_idx for r in reqs])
+        fan_mask = jnp.stack([self.tenants[r.tenant].fan_mask for r in reqs])
+        return args + (fan_idx, fan_mask)
 
     def run_wave(self, reqs: List[SNNRequest]) -> None:
         """One wave: S tenant register images in, S rate-decoded outputs
-        (and, for plastic tenants, learned weights written back)."""
-        counts, w2 = jax.block_until_ready(self._run(*self._assemble(reqs)))
+        (and, for plastic tenants, learned weights written back).
+
+        A wave is backend-homogeneous (admission groups by tenant
+        backend), so each wave runs one of the server's resident
+        programs -- no per-slot branching inside the compiled tick."""
+        backends = {self.tenants[r.tenant].backend for r in reqs}
+        if len(backends) != 1:
+            raise ValueError(f"wave mixes backends {sorted(backends)}")
+        run = self._run_for(backends.pop())
+        counts, w2 = jax.block_until_ready(run(*self._assemble(reqs)))
         now = time.time()
         counts = np.asarray(counts)
         for i, r in enumerate(reqs):
@@ -348,11 +433,14 @@ class SNNServer:
     def serve(self, requests: List[SNNRequest]) -> Dict:
         """Wave admission over a request queue + the LM server's stats.
 
-        Admission keeps at most ONE request per *plastic* tenant in any
-        wave: two slots learning from the same pre-wave registers would
-        race on the write-back (last slot wins, first request's learning
-        silently lost). Deferred duplicates ride the next wave, which
-        starts from the weights this wave learned.
+        Admission first groups the queue by tenant backend (waves are
+        backend-homogeneous: a sparse tenant rides the event program, a
+        dense one the default program -- each program compiled once,
+        ever), then keeps at most ONE request per *plastic* tenant in
+        any wave: two slots learning from the same pre-wave registers
+        would race on the write-back (last slot wins, first request's
+        learning silently lost). Deferred duplicates ride the next wave,
+        which starts from the weights this wave learned.
         """
         if not requests:
             return {"n_requests": 0, "n_tenants": 0, "waves": 0, "ticks": 0,
@@ -362,30 +450,33 @@ class SNNServer:
                     "recompiles_after_warmup": 0, "preds": {}}
         for r in requests:
             r.t_submit = time.time()
-        queue = list(requests)
         done: List[SNNRequest] = []
         waves = 0
-        compiles0 = self.compiles
-        while queue:
-            wave, deferred, plastic_in_wave = [], [], set()
-            for r in queue:
-                t = self.tenants[r.tenant]
-                admit = len(wave) < self.slots and not (
-                    t.plastic and r.tenant in plastic_in_wave)
-                if admit:
-                    wave.append(r)
-                    if t.plastic:
-                        plastic_in_wave.add(r.tenant)
-                else:
-                    deferred.append(r)
-            queue = deferred
-            while len(wave) < self.slots:   # static batch shape: pad w/ dummy
-                wave.append(SNNRequest(
-                    rid=-1, tenant=wave[0].tenant,
-                    ext=np.zeros((1, 1), np.float32), n_ticks=0))
-            self.run_wave(wave)
-            done.extend(r for r in wave if r.rid >= 0)
-            waves += 1
+        backends_in_use = sorted(
+            {self.tenants[r.tenant].backend for r in requests})
+        for backend in backends_in_use:
+            queue = [r for r in requests
+                     if self.tenants[r.tenant].backend == backend]
+            while queue:
+                wave, deferred, plastic_in_wave = [], [], set()
+                for r in queue:
+                    t = self.tenants[r.tenant]
+                    admit = len(wave) < self.slots and not (
+                        t.plastic and r.tenant in plastic_in_wave)
+                    if admit:
+                        wave.append(r)
+                        if t.plastic:
+                            plastic_in_wave.add(r.tenant)
+                    else:
+                        deferred.append(r)
+                queue = deferred
+                while len(wave) < self.slots:  # static batch: pad w/ dummy
+                    wave.append(SNNRequest(
+                        rid=-1, tenant=wave[0].tenant,
+                        ext=np.zeros((1, 1), np.float32), n_ticks=0))
+                self.run_wave(wave)
+                done.extend(r for r in wave if r.rid >= 0)
+                waves += 1
         total_spikes = float(sum(r.counts.sum() for r in done))
         t0 = min(r.t_submit for r in done)
         t1 = max(r.t_done for r in done)
@@ -402,7 +493,13 @@ class SNNServer:
             "mean_ttft_s": round(float(np.mean(
                 [r.t_first - r.t_submit for r in done])), 4),
             "compiles": self.compiles,
-            "recompiles_after_warmup": self.compiles - (compiles0 or 1),
+            # One trace per resident program (per backend) is warmup;
+            # anything past that is a retrace regression.
+            "recompiles_after_warmup": sum(
+                max(0, c - 1) for c in self._compiles.values()),
+            "backends": {b: sum(1 for r in done
+                                if self.tenants[r.tenant].backend == b)
+                         for b in backends_in_use},
             "preds": {r.rid: r.pred for r in done},
         }
 
@@ -434,7 +531,9 @@ def make_demo_tenants(server: SNNServer, n_tenants: int = 8, *,
             c = connectivity.ring(n, k=1 + i % 2)
             n_in, n_out = n, n
         elif kind == "sparse":
-            c = connectivity.sparse_random(n, 0.3, seed=seed + i)
+            # Sparse enough to clear the default event_density threshold:
+            # these tenants ride the event program when it's enabled.
+            c = connectivity.sparse_random(n, 0.1, seed=seed + i)
             n_in, n_out = n, n
         else:
             c = connectivity.all_to_all(n)
@@ -469,8 +568,12 @@ def make_demo_requests(server: SNNServer, names: List[str], n_requests: int,
 
 
 def serve_snn_main(cfg, args) -> Dict:
+    # Dense default program + event program for sparse tenants: tenants at
+    # or below 20% density pick event dispatch per slot (DESIGN.md §10).
+    backend = "jnp" if cfg.snn_backend == "event" else cfg.snn_backend
     server = SNNServer(n_max=cfg.n_neurons, slots=args.slots,
-                       max_ticks=cfg.n_ticks, mode=cfg.snn_mode)
+                       max_ticks=cfg.n_ticks, mode=cfg.snn_mode,
+                       backend=backend, event_density=0.2)
     names = make_demo_tenants(server, max(8, args.slots))
     print(f"serving SNN fabric n_max={server.n_max}: {len(names)} resident "
           f"tenants, {args.slots} slots, {args.requests} requests")

@@ -1,0 +1,108 @@
+"""Connection-list topologies: degenerate densities + compressed builders.
+
+The compressed representations (CSR, padded neighbor lists) are the
+event backend's data layout; they must round-trip the dense matrix
+exactly -- the builders never truncate, they *refuse* (a capped list
+that silently dropped a synapse would be the event-backend analogue of
+the ``top_k`` overflow bug).
+"""
+import numpy as np
+import pytest
+
+from repro.core import connectivity
+
+
+class TestSparseRandomEdges:
+    @pytest.mark.parametrize("self_connections", [False, True])
+    def test_density_zero_is_empty(self, self_connections):
+        c = connectivity.sparse_random(32, 0.0,
+                                       self_connections=self_connections)
+        assert c.dtype == np.bool_ and c.shape == (32, 32)
+        assert c.sum() == 0
+
+    def test_density_one_is_all_to_all(self):
+        c = connectivity.sparse_random(17, 1.0, self_connections=True)
+        assert bool(c.all())
+        np.testing.assert_array_equal(
+            c, connectivity.all_to_all(17, self_connections=True))
+
+    def test_density_one_no_self_connections(self):
+        c = connectivity.sparse_random(17, 1.0)
+        assert not c.diagonal().any()
+        assert c.sum() == 17 * 16
+
+    def test_validates_through_builders(self):
+        for density in (0.0, 1.0):
+            c = connectivity.sparse_random(9, density)
+            connectivity.validate(c)
+            indptr, indices = connectivity.to_csr(c)
+            np.testing.assert_array_equal(
+                connectivity.csr_to_dense(indptr, indices, 9), c)
+            nbrs = connectivity.padded_neighbors(c)
+            assert nbrs.n_edges == int(c.sum())
+
+
+class TestCSR:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    @pytest.mark.parametrize("density", [0.05, 0.3, 0.9])
+    def test_roundtrip_dense_csr_dense(self, seed, density):
+        c = connectivity.sparse_random(41, density, seed=seed)
+        indptr, indices = connectivity.to_csr(c)
+        assert indptr[0] == 0 and indptr[-1] == c.sum() == indices.size
+        np.testing.assert_array_equal(
+            connectivity.csr_to_dense(indptr, indices, 41), c)
+
+    def test_row_slices_are_sorted_targets(self):
+        c = connectivity.layered([3, 4])
+        indptr, indices = connectivity.to_csr(c)
+        for p in range(c.shape[0]):
+            row = indices[indptr[p] : indptr[p + 1]]
+            np.testing.assert_array_equal(row, np.sort(row))
+            np.testing.assert_array_equal(row, np.nonzero(c[p])[0])
+
+
+class TestPaddedNeighbors:
+    def test_fan_out_lists_match_dense(self):
+        c = connectivity.sparse_random(23, 0.2, seed=3)
+        nbrs = connectivity.padded_neighbors(c)
+        assert nbrs.axis == "out"
+        assert nbrs.cap == int(connectivity.fan_out(c).max())
+        for i in range(23):
+            live = nbrs.mask[i] > 0
+            np.testing.assert_array_equal(nbrs.idx[i][live], np.nonzero(c[i])[0])
+            assert not nbrs.idx[i][~live].any()  # padding is zeros
+
+    def test_fan_in_is_transpose_of_fan_out(self):
+        c = connectivity.sparse_random(19, 0.25, seed=4)
+        fo = connectivity.padded_neighbors(c.T)
+        fi = connectivity.padded_fan_in(c)
+        np.testing.assert_array_equal(fo.idx, fi.idx)
+        np.testing.assert_array_equal(fo.mask, fi.mask)
+        assert fi.axis == "in"
+
+    def test_cap_below_max_degree_refuses(self):
+        c = np.zeros((6, 6), np.bool_)
+        c[0, 1:] = True                        # hub: fan-out 5
+        with pytest.raises(ValueError, match="cap 3 below max degree 5"):
+            connectivity.padded_neighbors(c, cap=3)
+
+    def test_explicit_cap_pads_and_reports_stats(self):
+        c = np.zeros((4, 4), np.bool_)
+        c[0, 1] = c[0, 2] = c[1, 3] = True
+        nbrs = connectivity.padded_neighbors(c, cap=4)
+        assert nbrs.cap == 4 and nbrs.idx.shape == (4, 4)
+        assert nbrs.n_edges == 3 and nbrs.max_degree == 2
+        assert nbrs.mean_degree == pytest.approx(3 / 4)
+        assert nbrs.padding_fraction == pytest.approx(1 - 3 / 16)
+
+    def test_empty_topology_gets_minimal_cap(self):
+        nbrs = connectivity.padded_neighbors(np.zeros((5, 5), np.bool_))
+        assert nbrs.cap == 1 and nbrs.n_edges == 0
+        assert nbrs.padding_fraction == 1.0
+
+    def test_event_fan_in_rejects_fan_out_lists(self):
+        from repro.kernels.ops import EventFanIn
+
+        c = connectivity.sparse_random(8, 0.3, seed=5)
+        with pytest.raises(ValueError, match="fan-in"):
+            EventFanIn.from_padded(connectivity.padded_neighbors(c))

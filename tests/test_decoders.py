@@ -1,0 +1,51 @@
+"""Decoder edge cases (no hypothesis dependency -- always runs).
+
+Regression home for the all-silent ``decode_first_spike`` bug: a raster
+in which no output neuron ever spikes used to decode to class 0 (argmin
+of an all-``n_ticks`` first-spike array), indistinguishable from a
+confident class-0 prediction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestFirstSpikeSilence:
+    def test_all_silent_is_sentinel_not_class0(self):
+        silent = jnp.zeros((5, 4))
+        assert int(encoding.decode_first_spike(silent)) == -1
+
+    def test_batched_only_silent_rows_get_sentinel(self):
+        sp = np.zeros((5, 2, 4), np.float32)
+        sp[1, 0, 3] = 1.0                  # batch row 0 spikes, row 1 silent
+        out = np.asarray(encoding.decode_first_spike(jnp.asarray(sp)))
+        assert out[0] == 3 and out[1] == -1
+
+    def test_potential_tiebreak_fallback(self):
+        """With final membrane potentials, silent rows fall back to
+        decode_potential-style tie-breaking instead of the sentinel."""
+        sp = np.zeros((5, 2, 4), np.float32)
+        sp[0, 0, 1] = 1.0
+        v = np.asarray([[0.0, 0.1, 0.2, 0.05],   # spiking row: v ignored
+                        [0.3, 0.1, 0.9, 0.2]])   # silent row: argmax v == 2
+        out = np.asarray(encoding.decode_first_spike(
+            jnp.asarray(sp), jnp.asarray(v)))
+        assert out[0] == 1 and out[1] == 2
+        np.testing.assert_array_equal(
+            np.asarray(encoding.decode_potential(jnp.asarray(v))), [2, 2])
+
+    def test_custom_sentinel(self):
+        silent = jnp.zeros((3, 1, 2))
+        assert int(encoding.decode_first_spike(silent, silent=7)[0]) == 7
+
+    def test_spiking_rasters_unchanged(self):
+        """The fix must not move any decode that used to be legitimate."""
+        t, n = 6, 3
+        spikes = np.zeros((t, n), np.float32)
+        spikes[1, 2] = 1
+        spikes[2:5, 0] = 1
+        assert int(encoding.decode_first_spike(jnp.asarray(spikes))) == 2

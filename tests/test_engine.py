@@ -165,7 +165,7 @@ def _assert_trees_bitexact(a, b):
 # masking.
 # ---------------------------------------------------------------------------
 
-BACKENDS = ["jnp", "pallas_fused"]
+BACKENDS = ["jnp", "pallas_fused", "event"]
 
 
 class TestSeedEquivalence:
@@ -259,6 +259,88 @@ class TestSeedEquivalence:
         ras_e, _ = forward_layered(p, train, sizes, n_ticks=ticks,
                                    time_major=True, backend=backend)
         np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
+
+
+# ---------------------------------------------------------------------------
+# Event backend specifics: uniform delay rings, ragged fan-out padding,
+# overflow fallback, fan-in gather path -- all bit-exact vs the seed oracle
+# ---------------------------------------------------------------------------
+
+
+class TestEventBackend:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    @pytest.mark.parametrize("max_delay", [2, 4])
+    def test_uniform_delay_ring_bitexact(self, backend, max_delay):
+        """delays=None but a live D-slot ring: every backend reads the slot
+        arriving this tick, then dispatches -- bit-exact across backends."""
+        n, ticks = 8, 13
+        p = _params(n, connectivity.sparse_random(n, 0.5, seed=11), v_th=0.9)
+        st0 = SNNState.zeros((2,), n, max_delay=max_delay)
+        ext = _ext(n, ticks, (2,), p=0.3, seed=12)
+        fin_o, ras_o = _seed_rollout(p, st0, ext, ticks)
+        fin_e, ras_e = rollout(p, st0, ext, ticks, backend=backend)
+        np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
+        _assert_trees_bitexact(fin_o, fin_e)
+
+    def test_ragged_fanout_padding_bitexact(self):
+        """A hub neuron with full fan-out/fan-in next to near-silent rows:
+        the padded neighbor lists are maximally ragged, and both event
+        dispatch strategies still reproduce the oracle bit for bit."""
+        from repro.kernels.ops import EventFanIn
+
+        n, ticks = 10, 12
+        c = np.zeros((n, n), np.bool_)
+        c[0, 1:] = True          # hub fan-out: n-1 targets
+        c[1:, 0] = True          # hub fan-in: n-1 sources
+        c[3, 4] = c[7, 2] = True  # a couple of skinny rows
+        p = _params(n, c, v_th=0.8)
+        st0 = SNNState.zeros((), n)
+        ext = _ext(n, ticks, (), p=0.4, seed=13)
+        fin_o, ras_o = _seed_rollout(p, st0, ext, ticks)
+        _, ras_topk = rollout(p, st0, ext, ticks, backend="event")
+        np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_topk))
+        nbrs = EventFanIn.from_dense(c)
+        assert nbrs.idx.shape == (n, n - 1)     # cap == the hub's in-degree
+        _, ras_fi = rollout(p, st0, ext, ticks, backend="event",
+                            neighbors=nbrs)
+        np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_fi))
+
+    def test_overflow_fallback_bitexact_at_high_rate(self):
+        """k_active far below the spike count: the dense fallback keeps the
+        event backend exact instead of silently dropping spikes."""
+        n, ticks = 9, 10
+        p = _params(n, connectivity.sparse_random(n, 0.7, seed=14), v_th=0.3)
+        st0 = SNNState.zeros((), n)
+        ext = _ext(n, ticks, (), p=0.9, seed=15)   # near-saturated drive
+        fin_o, ras_o = _seed_rollout(p, st0, ext, ticks)
+        eng = TickEngine(backend="event", event_k_active=2)
+        fin_e, ras_e = eng.rollout(p, st0, ext, ticks)
+        assert float(np.asarray(ras_o).sum(-1).max()) > 2  # overflow happened
+        np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
+        _assert_trees_bitexact(fin_o, fin_e)
+
+    def test_fan_in_path_is_vmap_safe(self):
+        """The gather path has no data-dependent control flow: vmapping the
+        rollout over a leading axis (the server's slot axis) equals the
+        per-element loop bit for bit."""
+        from repro.kernels.ops import EventFanIn
+
+        n, ticks, slots = 7, 8, 3
+        c = connectivity.sparse_random(n, 0.4, seed=16)
+        nbrs = EventFanIn.from_dense(c)
+        ps = [_params(n, c, seed=20 + i, v_th=0.9) for i in range(slots)]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+        ext = _ext(n, ticks, (slots,), p=0.3, seed=17)
+
+        def one(p, e):
+            eng = TickEngine(backend="event")
+            st0 = SNNState.zeros((), n)
+            return eng.rollout(p, st0, e, ticks, neighbors=nbrs)[1]
+
+        ras_v = jax.vmap(one, in_axes=(0, 1))(stacked, ext)
+        for i in range(slots):
+            np.testing.assert_array_equal(
+                np.asarray(ras_v[i]), np.asarray(one(ps[i], ext[:, i])))
 
 
 # ---------------------------------------------------------------------------

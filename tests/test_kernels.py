@@ -108,6 +108,26 @@ def test_event_matmul_exact_when_sparse(b, n, k_active, seed):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+@settings(deadline=None, max_examples=15)
+@given(
+    b=st.integers(1, 8), n=st.integers(16, 128), seed=st.integers(0, 2**31 - 1),
+)
+def test_event_matmul_exact_past_k_active(b, n, seed):
+    """Regression: rows spiking MORE than k_active used to be silently
+    truncated by the top_k (a wrong synaptic input); the overflow now
+    falls back to the dense product and stays exact at any rate."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(n, n)).astype(np.float32)
+    c = (rng.random((n, n)) < 0.5).astype(np.float32)
+    k_active = 4
+    s = (rng.random((b, n)) < 0.9).astype(np.float32)
+    s[0, : k_active + 2] = 1.0                       # guarantee overflow
+    got = ops.event_spike_matmul(jnp.asarray(s), jnp.asarray(w), jnp.asarray(c),
+                                 k_active=k_active)
+    want = spike_matmul_ref(jnp.asarray(s), jnp.asarray(w), jnp.asarray(c))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
 def test_network_pallas_backend_matches_jnp():
     from repro.core import connectivity
     from repro.core.lif import LIFParams

@@ -121,6 +121,96 @@ class TestOneProgramManyTenants:
         np.testing.assert_array_equal(short.counts, expect)
 
 
+class TestEventTenancy:
+    """Sparse tenants pick the event program per slot (DESIGN.md §10)."""
+
+    def _sparse_bank(self, n, *, seed):
+        rng = np.random.default_rng(seed)
+        c = connectivity.sparse_random(n, 0.1, seed=seed)
+        bank = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+        bank.set_connection_list(c)
+        bank.set_weights((rng.integers(60, 200, (n, n)) * c).astype(np.uint8))
+        bank.set_thresholds(np.full((n,), 70, np.uint8))
+        return bank
+
+    def test_sparse_tenant_routes_to_event_backend(self):
+        server = _server(event_density=0.2)
+        server.add_tenant("sparse", self._sparse_bank(N_MAX, seed=20),
+                          n_in=N_MAX, n_out=N_MAX)
+        server.add_tenant("dense", _layered_bank(8, 8, seed=21), n_in=8,
+                          n_out=8)
+        assert server.tenants["sparse"].backend == "event"
+        assert server.tenants["sparse"].fan_idx.shape == (
+            N_MAX, server.event_cap)
+        assert server.tenants["dense"].backend == "jnp"
+        assert server.tenants["dense"].fan_idx is None
+
+    def test_event_disabled_by_default(self):
+        server = _server()
+        server.add_tenant("sparse", self._sparse_bank(N_MAX, seed=22),
+                          n_in=N_MAX, n_out=N_MAX)
+        assert server.tenants["sparse"].backend == "jnp"
+
+    def test_mixed_waves_one_compile_per_backend_zero_recompiles(self):
+        server = _server(slots=2, event_density=0.2)
+        server.add_tenant("s0", self._sparse_bank(N_MAX, seed=23),
+                          n_in=N_MAX, n_out=N_MAX)
+        server.add_tenant("s1", self._sparse_bank(N_MAX, seed=24),
+                          n_in=N_MAX, n_out=N_MAX)
+        server.add_tenant("d0", _layered_bank(8, 8, seed=25), n_in=8, n_out=8)
+        reqs = []
+        for i, name in enumerate(["s0", "d0", "s1", "d0", "s0"]):
+            t = server.tenants[name]
+            reqs.append(SNNRequest(rid=i, tenant=name,
+                                   ext=_drive(6, t.n_in, seed=30 + i),
+                                   n_ticks=6))
+        stats = server.serve(reqs)
+        assert stats["n_requests"] == 5
+        assert stats["backends"] == {"event": 3, "jnp": 2}
+        assert stats["compiles"] == 2          # one per resident program
+        assert stats["recompiles_after_warmup"] == 0
+        # a second mixed queue stays warm on both programs
+        stats2 = server.serve([SNNRequest(
+            rid=9, tenant=name, ext=_drive(5, server.tenants[name].n_in,
+                                           seed=40), n_ticks=5)
+            for name in ("s1", "d0")])
+        assert stats2["compiles"] == 2
+        assert stats2["recompiles_after_warmup"] == 0
+
+    def test_event_wave_matches_core_engine_rollout(self):
+        """The event program's served raster equals the plain jnp rollout
+        tenant-by-tenant (bit-exact at fabric size)."""
+        server = _server(slots=2, max_ticks=8, event_density=0.2)
+        server.add_tenant("s", self._sparse_bank(N_MAX, seed=26),
+                          n_in=N_MAX, n_out=N_MAX)
+        req = SNNRequest(rid=0, tenant="s", ext=_drive(8, N_MAX, seed=27),
+                         n_ticks=8)
+        server.serve([req])
+        t = server.tenants["s"]
+        ext = np.zeros((8, N_MAX), np.float32)
+        ext[: req.ext.shape[0]] = req.ext
+        _, raster = rollout(t.params, SNNState.zeros((), N_MAX),
+                            jnp.asarray(ext), 8)
+        np.testing.assert_array_equal(
+            req.counts, np.asarray(raster).sum(0)[t.n - t.n_out : t.n])
+
+    def test_hub_tenant_exceeding_cap_stays_dense(self):
+        """A sparse-by-density tenant with one hub neuron above the fan-in
+        cap must NOT ride the event program (the cap never truncates)."""
+        n = N_MAX
+        c = np.zeros((n, n), np.bool_)
+        c[:, 0] = True            # hub in-degree n > default cap n//4
+        c[0, 0] = False
+        bank = RegisterBank(n, weight_layout=WeightLayout.PER_SYNAPSE)
+        bank.set_connection_list(c)
+        bank.set_weights((np.full((n, n), 90) * c).astype(np.uint8))
+        bank.set_thresholds(np.full((n,), 70, np.uint8))
+        server = _server(event_density=0.2)
+        server.add_tenant("hub", bank, n_in=n, n_out=n)
+        assert server.tenants["hub"].density <= 0.2
+        assert server.tenants["hub"].backend == "jnp"
+
+
 class TestPlasticTenancy:
     def test_frozen_tenants_bit_identical_plastic_learns(self):
         server = _server(slots=4, max_ticks=10)
