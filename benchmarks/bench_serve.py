@@ -59,6 +59,17 @@ def run(fast: bool = True) -> Dict:
         "mean_ttft_s": stats["mean_ttft_s"],
         "wall_s": round(wall, 3),
         "recompiles": recompiles,
+        # Wave-telemetry summary (underscore keys are informational, not
+        # gated): whole-fabric activity + the per-tenant report, straight
+        # off the scan carry -- what the BENCH artifact preserves for a
+        # reader who wasn't at the run.
+        "_telemetry": {
+            "event_overflow_ticks": server.registry.get(
+                "snn_event_overflow_ticks_total").value(),
+            "weight_delta_l1": round(server.registry.get(
+                "snn_weight_delta_l1_total").value(), 3),
+            "tenants": server.tenant_report(),
+        },
     }
     assert recompiles == 0, f"tenant swaps recompiled {recompiles}x"
     return out

@@ -10,8 +10,15 @@ checked key-by-key:
   exceed the baseline -- any increase is a regression (the "no
   re-synthesis" property, enforced);
 * exactness keys (``*_exact``) must stay true if the baseline says true;
+* ratio keys (``*_on_off_ratio``) must not fall below the baseline,
+  which is a *policy floor* (e.g. telemetry-on must keep >= 0.9x the
+  telemetry-off ticks/s -- the <10% overhead budget); ``--refresh``
+  preserves the committed floor instead of snapshotting the run;
 * a key present in the baseline but missing from the current run fails
   (a silently dropped metric is not a pass).
+
+On a pass the gate prints a one-line-per-metric delta table (baseline
+vs current), so CI logs show how much headroom each floor has left.
 
 Baselines are *floors you refresh deliberately*, not last-run snapshots:
 commit conservative values (CI runners vary ~2x in wall-clock) and bump
@@ -50,6 +57,10 @@ def _is_exact_key(k: str) -> bool:
     return k.endswith("_exact")
 
 
+def _is_ratio_key(k: str) -> bool:
+    return k.endswith("_on_off_ratio")
+
+
 def check_one(
     name: str, baseline: Dict, current: Dict, tolerance: float,
 ) -> List[str]:
@@ -75,7 +86,29 @@ def check_one(
         elif _is_exact_key(k):
             if bool(base) and not bool(cur):
                 failures.append(f"{name}: {k} regressed True -> {cur}")
+        elif _is_ratio_key(k):
+            if float(cur) < float(base):
+                failures.append(
+                    f"{name}: {k} fell below the policy floor "
+                    f"{base} -> {cur}")
     return failures
+
+
+def _delta_table(baseline: Dict, current: Dict) -> List[str]:
+    """One line per gated metric: baseline vs current, with slack."""
+    rows = []
+    for k in sorted(baseline):
+        if k.startswith("_") or k not in current:
+            continue
+        base, cur = baseline[k], current[k]
+        if _is_rate_key(k) or _is_ratio_key(k):
+            slack = (float(cur) - float(base)) / max(1e-9, abs(float(base)))
+            rows.append(f"    {k}: {base} -> {cur} ({slack:+.0%} vs floor)")
+        elif _is_compile_key(k):
+            rows.append(f"    {k}: {base} -> {cur} (ceiling {base})")
+        elif _is_exact_key(k):
+            rows.append(f"    {k}: {base} -> {cur}")
+    return rows
 
 
 def _load_pairs(current_dir: str) -> List[Tuple[str, Dict, Dict]]:
@@ -116,7 +149,8 @@ def refresh(current_dir: str) -> None:
         gated_current = {
             k for k in current
             if not k.startswith("_")
-            and (_is_rate_key(k) or _is_compile_key(k) or _is_exact_key(k))}
+            and (_is_rate_key(k) or _is_compile_key(k) or _is_exact_key(k)
+                 or _is_ratio_key(k))}
         gated_base = {k for k in baseline if not k.startswith("_")}
         for k in sorted(gated_base - set(current)):
             errors.append(
@@ -135,6 +169,10 @@ def refresh(current_dir: str) -> None:
                               f"(above old floor {baseline.get(k, 0)})")
             if _is_rate_key(k):
                 v = round(float(v) * REFRESH_HEADROOM, 1)
+            if _is_ratio_key(k):
+                # Policy floors, not snapshots: refresh keeps the committed
+                # floor; a brand-new ratio key starts 10% under its run.
+                v = baseline.get(k, round(float(v) * 0.9, 3))
             fresh[k] = v
         staged.append((fname, fresh))
     if errors:
@@ -178,6 +216,8 @@ def main(argv=None) -> int:
         status = "FAIL" if fails else "ok"
         print(f"[{status}] {fname}: {n_keys} gated metrics, "
               f"{len(fails)} regressions")
+        for row in _delta_table(baseline, current):
+            print(row)
         all_failures += fails
 
     for f in all_failures:

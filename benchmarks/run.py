@@ -6,6 +6,12 @@ any bench raises -- a crashed bench must fail CI, not vanish into a
 printout (the old behaviour only printed the summary and swallowed
 nothing explicitly, but gave the gate nothing to read either).
 
+Every bench record carries a uniform ``_wall_s`` (runner-measured, not
+bench-self-reported) and ``_platform`` (``jax.default_backend()``), so a
+BENCH file read months later says what device produced it. ``--profile
+DIR`` captures a ``jax.profiler`` trace of the whole run (the CI bench
+job uploads it next to the BENCH_*.json artifacts).
+
 Usage: PYTHONPATH=src python -m benchmarks.run [--fast] [--out BENCH_all.json]
 """
 from __future__ import annotations
@@ -22,12 +28,18 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="skip the training-heavy benches")
     ap.add_argument("--out", default="BENCH_all.json")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="capture a jax.profiler trace of the benches "
+                         "into DIR")
     args = ap.parse_args()
+
+    import jax
 
     from benchmarks import (
         bench_iris, bench_latency, bench_mnist, bench_serve, bench_snn_scale,
         bench_stdp, bench_uart,
     )
+    from repro.obs import profile
 
     benches = [
         ("uart", bench_uart.run),
@@ -39,29 +51,32 @@ def main() -> None:
     if not args.fast:
         benches += [("iris", bench_iris.run), ("mnist", bench_mnist.run)]
 
-    results = {}
+    platform = jax.default_backend()
+    results = {"_platform": platform}
     failures = []
-    for name, fn in benches:
-        t0 = time.perf_counter()
-        print(f"=== bench:{name} ===", flush=True)
-        try:
-            res = fn()
-        except Exception as e:  # noqa: BLE001 -- recorded, then fatal at exit
-            traceback.print_exc()
-            failures.append(name)
-            results[name] = {"_error": f"{type(e).__name__}: {e}"}
-            continue
-        # perf_counter + 6 decimals: cost-model benches (e.g. uart) finish
-        # in well under 10 ms, which the old time.time()/round(_, 2) pair
-        # recorded as a flat (and wrong) 0.0.
-        res["_wall_s"] = round(time.perf_counter() - t0, 6)
-        results[name] = res
-        for k, v in res.items():
-            print(f"  {k}: {v}")
-        # Per-bench artifact (what check_regression.py and CI read/upload);
-        # same file the bench's own __main__ writes.
-        with open(f"BENCH_{name}.json", "w") as f:
-            json.dump(res, f, indent=2, default=str)
+    with profile(args.profile):
+        for name, fn in benches:
+            t0 = time.perf_counter()
+            print(f"=== bench:{name} ===", flush=True)
+            try:
+                res = fn()
+            except Exception as e:  # noqa: BLE001 -- recorded, fatal at exit
+                traceback.print_exc()
+                failures.append(name)
+                results[name] = {"_error": f"{type(e).__name__}: {e}"}
+                continue
+            # perf_counter + 6 decimals: cost-model benches (e.g. uart)
+            # finish in well under 10 ms, which the old time.time()/
+            # round(_, 2) pair recorded as a flat (and wrong) 0.0.
+            res["_wall_s"] = round(time.perf_counter() - t0, 6)
+            res["_platform"] = platform
+            results[name] = res
+            for k, v in res.items():
+                print(f"  {k}: {v}")
+            # Per-bench artifact (what check_regression.py and CI read/
+            # upload); same file the bench's own __main__ writes.
+            with open(f"BENCH_{name}.json", "w") as f:
+                json.dump(res, f, indent=2, default=str)
 
     # roofline summary if dry-run artifacts exist (best-effort readout of
     # OPTIONAL artifacts -- unlike the benches above, absence is not failure)

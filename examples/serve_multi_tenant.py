@@ -71,6 +71,18 @@ def main(argv=None):
     print(f"  plastic tenant weight drift across waves: {drift:.1f} "
           "(frozen tenants: bit-identical by construction)")
     assert drift > 0, "the plastic tenant never learned"
+
+    # Per-tenant activity from the wave telemetry riding the scan carry:
+    # spike rates, refractory occupancy, and (for the plastic tenant) the
+    # accumulated |dw| -- all measured on-device, no extra rollouts.
+    print("per-tenant activity:")
+    for name, row in server.tenant_report().items():
+        print(f"  {name:>10}: requests={row['requests']:>2} "
+              f"spike_rate={row['spike_rate']:.3f} "
+              f"refractory={row['refractory_occupancy']:.3f} "
+              f"dw_l1={row['dw_l1']:.1f}"
+              f"{'  [plastic]' if row['plastic'] else ''}")
+    assert server.tenant_report()[plastic[0]]["dw_l1"] > 0
     print("PASS - one compiled tick program served "
           f"{stats['n_tenants']} networks / {stats['n_requests']} requests")
     return stats

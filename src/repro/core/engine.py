@@ -33,10 +33,21 @@ Two structural invariants the engine owns:
   the carry and changes every tick -- that recompute is the datapath,
   not waste.
 
-Carry spec: :class:`TickCarry` has three slots -- ``state`` (always),
-``plast`` + ``w`` (learning only; ``None`` leaves vanish from the
-pytree, so the frozen carry is exactly the seed's ``SNNState`` carry and
-rasters stay bit-identical).
+Carry spec: :class:`TickCarry` has four slots -- ``state`` (always),
+``plast`` + ``w`` (learning only) and ``telem`` (telemetry only;
+``None`` leaves vanish from the pytree, so the frozen/untelemetered
+carry is exactly the seed's ``SNNState`` carry and rasters stay
+bit-identical).
+
+Observability (DESIGN.md §11): ``telemetry=True`` (a *static* flag, like
+``backend``) threads a :class:`~repro.obs.telemetry.TickTelemetry`
+accumulator through the carry -- per-tick spike counts, membrane
+mean/max, refractory occupancy, event-overflow ticks and plasticity
+weight-delta norms, all carry-resident reductions with no host syncs
+inside the scan. ``telemetry=False`` compiles to HLO byte-identical to
+the pre-observability engine (pinned in tests/test_obs.py), and the
+``jax.named_scope`` labels on the backend arms are pure metadata under
+the same pin.
 """
 from __future__ import annotations
 
@@ -61,11 +72,15 @@ class TickCarry:
       w: the *mutable* weight matrix, or None on the frozen path (frozen
         weights are scan constants, so they live outside the carry and
         the hoisted ``W*C`` stays valid for the whole rollout).
+      telem: :class:`~repro.obs.telemetry.TickTelemetry` accumulators, or
+        None when the engine's ``telemetry`` flag is off (the leaf then
+        vanishes from the pytree -- zero carry growth, identical HLO).
     """
 
     state: SNNState
     plast: Optional[Any] = None
     w: Optional[jax.Array] = None
+    telem: Optional[Any] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +105,11 @@ class TickEngine:
         it fall back to the dense product per ``event_overflow``.
       event_overflow: "fallback" (dense product on overflow ticks,
         exact at any rate), "strict" (checkify error) or "unchecked".
+      telemetry: static flag; when True the carry gains a
+        :class:`~repro.obs.telemetry.TickTelemetry` slot and every tick
+        folds its reductions in (see the module docstring). When False
+        (default) the lowered HLO is byte-identical to the
+        pre-observability engine.
     """
 
     mode: str = "fixed_leak"
@@ -99,6 +119,7 @@ class TickEngine:
     plasticity_backend: Optional[str] = None
     event_k_active: Optional[int] = None
     event_overflow: str = "fallback"
+    telemetry: bool = False
 
     # -- the single tick body ---------------------------------------------
 
@@ -158,19 +179,21 @@ class TickEngine:
             #    per tile in VMEM.
             from repro.kernels import ops  # local import; CPU tests use jnp
 
-            p = dataclasses.replace(params, w=w) if learning else params
-            lif_state, delay_buf = ops.fused_tick(
-                st, p, ext, wc=wc, delays=delays,
-                mode=self.mode, surrogate=self.surrogate)
+            with jax.named_scope("tick/pallas_fused"):
+                p = dataclasses.replace(params, w=w) if learning else params
+                lif_state, delay_buf = ops.fused_tick(
+                    st, p, ext, wc=wc, delays=delays,
+                    mode=self.mode, surrogate=self.surrogate)
             state2 = SNNState(lif=lif_state, delay_buf=delay_buf,
                               tick=st.tick + 1)
-            return self._plasticity_hook(carry, st, state2, w, reward,
-                                         params, plastic_c, learn_until)
+            return self._tick_tail(carry, st, state2, w, reward,
+                                   params, plastic_c, learn_until)
 
         if wc is None:
             wc = w * params.c.astype(w.dtype)
 
         slot = jnp.mod(st.tick, max_delay)
+        overflow_inc = None
 
         if delays is None:
             # -- delay-line read: spikes scheduled to arrive this tick.
@@ -181,10 +204,11 @@ class TickEngine:
             if self.backend == "pallas":
                 from repro.kernels import ops  # local import; CPU tests use jnp
 
-                p = dataclasses.replace(params, w=w) if learning else params
-                lif_state = ops.fused_lif_step(
-                    st.lif, arriving, p, ext,
-                    mode=self.mode, surrogate=self.surrogate)
+                with jax.named_scope("tick/pallas"):
+                    p = dataclasses.replace(params, w=w) if learning else params
+                    lif_state = ops.fused_lif_step(
+                        st.lif, arriving, p, ext,
+                        mode=self.mode, surrogate=self.surrogate)
             elif self.backend == "event":
                 # -- event-driven dispatch: only spiking neurons' fan-outs
                 #    are gathered (the mux fabric routes nothing for silent
@@ -192,17 +216,31 @@ class TickEngine:
                 #    path and this tick's carry-derived matrix when learning.
                 from repro.kernels import ops  # local import; CPU path is jnp
 
-                lif_state = ops.event_lif_step(
-                    st.lif, arriving, params, ext, wc,
-                    k_active=self.event_k_active, fan_in=neighbors,
-                    overflow=self.event_overflow,
-                    mode=self.mode, surrogate=self.surrogate)
+                with jax.named_scope("tick/event"):
+                    lif_state = ops.event_lif_step(
+                        st.lif, arriving, params, ext, wc,
+                        k_active=self.event_k_active, fan_in=neighbors,
+                        overflow=self.event_overflow,
+                        mode=self.mode, surrogate=self.surrogate)
+                if self.telemetry and carry.telem is not None \
+                        and neighbors is None:
+                    # Mirror ops.event_synaptic_input's fallback trigger:
+                    # ANY batch row spiking past k_active flips the whole
+                    # tick to the dense product (lax.cond). The fan-in
+                    # gather path is exact by construction (no overflow).
+                    n = arriving.shape[-1]
+                    k = min(self.event_k_active or ops.default_k_active(n), n)
+                    over = jnp.any(jnp.sum(arriving > 0, axis=-1) > k)
+                    overflow_inc = jnp.broadcast_to(
+                        over.astype(jnp.int32), carry.telem.overflow.shape)
             else:
-                syn = arriving @ wc
-                if ext is not None:
-                    syn = syn + ext @ params.w_in
-                lif_state = lif_step(st.lif, syn, params.lif,
-                                     mode=self.mode, surrogate=self.surrogate)
+                with jax.named_scope("tick/jnp"):
+                    syn = arriving @ wc
+                    if ext is not None:
+                        syn = syn + ext @ params.w_in
+                    lif_state = lif_step(st.lif, syn, params.lif,
+                                         mode=self.mode,
+                                         surrogate=self.surrogate)
         else:
             # -- per-synapse delays: synapse (pre,post) reads slot (tick - delay).
             #    Like "pallas", the "event" backend composes with the matrix-
@@ -229,14 +267,16 @@ class TickEngine:
         else:
             delay_buf = st.delay_buf
         state2 = SNNState(lif=lif_state, delay_buf=delay_buf, tick=st.tick + 1)
-        return self._plasticity_hook(carry, st, state2, w, reward,
-                                     params, plastic_c, learn_until)
+        return self._tick_tail(carry, st, state2, w, reward,
+                               params, plastic_c, learn_until,
+                               overflow_inc=overflow_inc)
 
-    def _plasticity_hook(
+    def _tick_tail(
         self, carry, st, state2, w, reward, params, plastic_c, learn_until,
+        overflow_inc=None,
     ) -> Tuple[TickCarry, jax.Array]:
-        """Shared tick tail: optionally run the plasticity datapath and
-        rebuild the carry.
+        """Shared tick tail: optionally run the plasticity datapath, fold
+        telemetry, and rebuild the carry.
 
         ``s_pre`` is what arrived (previous emissions), ``s_post`` what was
         just emitted -- the NeuroCoreX shared datapath. The hook always runs
@@ -246,6 +286,8 @@ class TickEngine:
         """
         learning = carry.w is not None
         lif_state = state2.lif
+        telemetry = self.telemetry and carry.telem is not None
+        dw = None
         if learning and self.plasticity is not None:
             from repro.plasticity import rules as plasticity_rules
 
@@ -254,18 +296,28 @@ class TickEngine:
                 pb = "pallas"  # the plasticity pass has no whole-tick variant
             elif pb == "event":
                 pb = "jnp"     # STDP outer products are dense; no event pass
-            pst2, w2 = plasticity_rules.plasticity_step(
-                carry.plast, st.lif.y, lif_state.y, w,
-                params.c if plastic_c is None else plastic_c,
-                self.plasticity, reward, backend=pb)
+            with jax.named_scope("tick/plasticity"):
+                pst2, w2 = plasticity_rules.plasticity_step(
+                    carry.plast, st.lif.y, lif_state.y, w,
+                    params.c if plastic_c is None else plastic_c,
+                    self.plasticity, reward, backend=pb)
             if learn_until is not None:
                 gate = st.tick < learn_until
                 w2 = jnp.where(gate, w2, w)
                 pst2 = jax.tree.map(
                     lambda new, old: jnp.where(gate, new, old),
                     pst2, carry.plast)
-            return TickCarry(state=state2, plast=pst2, w=w2), lif_state.y
-        return TickCarry(state=state2, plast=carry.plast, w=carry.w), lif_state.y
+            if telemetry:
+                dw = w2 - w  # the committed delta (after learn_until gating)
+            telem2 = carry.telem.accumulate(
+                lif_state, overflow_inc=overflow_inc,
+                dw=dw) if telemetry else carry.telem
+            return TickCarry(state=state2, plast=pst2, w=w2,
+                             telem=telem2), lif_state.y
+        telem2 = carry.telem.accumulate(
+            lif_state, overflow_inc=overflow_inc) if telemetry else carry.telem
+        return TickCarry(state=state2, plast=carry.plast, w=carry.w,
+                         telem=telem2), lif_state.y
 
     # -- scan driver -------------------------------------------------------
 
@@ -287,7 +339,15 @@ class TickEngine:
 
         Frozen carries (``carry0.w is None``) get the hoisted ``W*C``;
         learning carries re-derive it per tick from the carried weights.
+        With ``telemetry=True`` a zeroed accumulator is seeded into the
+        carry when the caller didn't provide one.
         """
+        if self.telemetry and carry0.telem is None:
+            from repro.obs.telemetry import TickTelemetry
+
+            carry0 = dataclasses.replace(
+                carry0,
+                telem=TickTelemetry.zeros(carry0.state.lif.v.shape[:-1]))
         learning = carry0.w is not None
         wc = None
         if not learning and self.backend != "pallas":
@@ -338,10 +398,15 @@ class TickEngine:
         *,
         delays: Optional[jax.Array] = None,
         neighbors: Optional[Any] = None,
-    ) -> Tuple[SNNState, jax.Array]:
-        """Frozen-weight rollout; returns ``(final_state, raster)``."""
+    ):
+        """Frozen-weight rollout; returns ``(final_state, raster)`` -- or
+        ``(final_state, raster, telemetry)`` when the engine's static
+        ``telemetry`` flag is set (the extra element is compile-time
+        constant arity, so no retraces)."""
         final, raster = self.scan(params, TickCarry(state=state), ext_seq,
                                   n_ticks, delays=delays, neighbors=neighbors)
+        if self.telemetry:
+            return final.state, raster, final.telem
         return final.state, raster
 
     def learning_rollout(
@@ -356,9 +421,11 @@ class TickEngine:
         plastic_c: Optional[jax.Array] = None,
         learn_until: Optional[jax.Array] = None,
         neighbors: Optional[Any] = None,
-    ) -> Tuple[Tuple[SNNState, Any, jax.Array], jax.Array]:
+    ):
         """Learning rollout: the carry holds mutable weights; returns
-        ``((final_state, final_plast_state, final_w), raster)``.
+        ``((final_state, final_plast_state, final_w), raster)`` -- plus a
+        trailing ``telemetry`` element when the engine's static
+        ``telemetry`` flag is set.
 
         ``learn_until`` (optional runtime scalar) freezes the plasticity
         hook from that tick on -- see :meth:`tick_body`."""
@@ -376,4 +443,6 @@ class TickEngine:
         final, raster = self.scan(params, carry0, ext_seq, n_ticks,
                                   rewards=rewards, plastic_c=plastic_c,
                                   learn_until=learn_until, neighbors=neighbors)
+        if self.telemetry:
+            return (final.state, final.plast, final.w), raster, final.telem
         return (final.state, final.plast, final.w), raster

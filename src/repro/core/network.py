@@ -81,15 +81,21 @@ def rollout(
     delays: Optional[jax.Array] = None,
     backend: str = "jnp",
     neighbors=None,
-) -> Tuple[SNNState, jax.Array]:
+    telemetry: bool = False,
+):
     """Scan ``n_ticks`` network ticks; returns final state + spike raster.
 
     ``ext_seq`` is ``(n_ticks, ..., n_in)`` or None (autonomous dynamics).
     The raster has shape ``(n_ticks, ..., n)``. The masked matrix ``W*C``
     is hoisted out of the scan (loop-invariant for frozen weights).
     ``backend``/``neighbors``: see :func:`step`.
+    ``telemetry=True`` (static) appends a
+    :class:`repro.obs.telemetry.TickTelemetry` to the return tuple:
+    ``(final_state, raster, telemetry)``; off by default and bit-free
+    when off (tests/test_obs.py pins the HLO identity).
     """
-    eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend)
+    eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend,
+                     telemetry=telemetry)
     return eng.rollout(params, state, ext_seq, n_ticks, delays=delays,
                        neighbors=neighbors)
 
@@ -108,7 +114,8 @@ def learning_rollout(
     backend: str = "jnp",
     plasticity_backend: Optional[str] = None,
     neighbors=None,
-) -> Tuple[Tuple[SNNState, "object", jax.Array], jax.Array]:
+    telemetry: bool = False,
+):
     """Scan ``n_ticks`` *learning* ticks: the carry holds mutable weights.
 
     Each tick runs the inference datapath with the current weight matrix,
@@ -138,12 +145,16 @@ def learning_rollout(
         "jnp" -- the learning hook always runs outside the tick kernel).
       neighbors: optional :class:`repro.kernels.ops.EventFanIn` for the
         "event" backend's vmap-safe fan-in gather path.
+      telemetry: static flag; True appends a
+        :class:`repro.obs.telemetry.TickTelemetry` to the return tuple.
 
     Returns:
-      ``((final_state, final_plast_state, final_w), raster)``.
+      ``((final_state, final_plast_state, final_w), raster)``, plus a
+      trailing ``telemetry`` element when ``telemetry=True``.
     """
     eng = TickEngine(mode=mode, backend=backend, plasticity=plasticity,
-                     plasticity_backend=plasticity_backend)
+                     plasticity_backend=plasticity_backend,
+                     telemetry=telemetry)
     return eng.learning_rollout(params, state, plast_state, ext_seq, n_ticks,
                                 rewards=rewards, plastic_c=plastic_c,
                                 neighbors=neighbors)

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.configs import get_bundle
 from repro.models import model as M
+from repro.obs import MetricsRegistry, log_event, profile, span
 
 
 @dataclasses.dataclass
@@ -117,6 +118,11 @@ class WaveServer:
 
 def serve(cfg, params, requests: List[Request], *, slots: int = 4,
           max_len: int = 64) -> Dict:
+    if not requests:
+        # Empty queue: a well-formed zero report, never np.mean([]).
+        return {"n_requests": 0, "requests_served": 0, "decode_steps": 0,
+                "new_tokens": 0, "wall_s": 0.0, "tokens_per_s": 0.0,
+                "mean_ttft_s": 0.0, "outputs": {}}
     server = WaveServer(cfg, params, slots=slots, max_len=max_len)
     for r in requests:
         r.t_submit = time.time()
@@ -137,12 +143,13 @@ def serve(cfg, params, requests: List[Request], *, slots: int = 4,
     t1 = max(r.t_done for r in done)
     return {
         "n_requests": len(done),
+        "requests_served": len(done),
         "decode_steps": steps,
         "new_tokens": total_new,
         "wall_s": round(t1 - t0, 3),
         "tokens_per_s": round(total_new / max(1e-9, t1 - t0), 2),
         "mean_ttft_s": round(float(np.mean(
-            [r.t_first - r.t_submit for r in done])), 3),
+            [r.t_first - r.t_submit for r in done])), 3) if done else 0.0,
         "outputs": {r.rid: r.out[:8] for r in done},
     }
 
@@ -243,7 +250,8 @@ class SNNServer:
     def __init__(self, *, n_max: int, slots: int = 8, max_ticks: int = 32,
                  mode: str = "fixed_leak", backend: str = "jnp",
                  plasticity=None, event_density: Optional[float] = None,
-                 event_cap: Optional[int] = None):
+                 event_cap: Optional[int] = None, telemetry: bool = True,
+                 registry: Optional[MetricsRegistry] = None):
         """Args (beyond the obvious):
 
         backend: the default tick backend every tenant rides.
@@ -257,6 +265,13 @@ class SNNServer:
           whole server keeps the event wave's shapes static, so tenant
           swaps never retrace (a tenant whose in-degree exceeds the cap
           simply stays on the dense program -- never truncated).
+        telemetry: thread :class:`~repro.obs.telemetry.TickTelemetry`
+          through every wave's scan carry (static flag -- the resident
+          programs are traced with it once, never retraced). Feeds
+          :meth:`tenant_report` and the spike/overflow/weight-delta
+          metrics; False serves the exact telemetry-free programs.
+        registry: a :class:`~repro.obs.metrics.MetricsRegistry` to report
+          into; defaults to a fresh private one (``server.registry``).
         """
         from repro.core.engine import TickEngine
         from repro.plasticity import PlasticityParams
@@ -267,16 +282,44 @@ class SNNServer:
         self.backend = backend
         self.event_density = event_density
         self.event_cap = int(event_cap or max(1, n_max // 4))
+        self.telemetry = bool(telemetry)
         if plasticity is None:
             plasticity = PlasticityParams.make(
                 "stdp", a_plus=0.5, a_minus=0.25, w_min=0.0, w_max=255.0)
         self._mk_engine = lambda b: TickEngine(mode=mode, backend=b,
-                                               plasticity=plasticity)
+                                               plasticity=plasticity,
+                                               telemetry=self.telemetry)
         self.engine = self._mk_engine(backend)
         self._engines = {backend: self.engine}
         self.tenants: Dict[str, Tenant] = {}
         self._compiles: Dict[str, int] = {}   # per-program, TRACE time only
         self._runs: Dict[str, object] = {}
+        self._tenant_obs: Dict[str, Dict] = {}  # accumulated telemetry
+        self.registry = registry if registry is not None else MetricsRegistry()
+        r = self.registry
+        self._c_requests = r.counter(
+            "snn_requests_total", "requests served to completion")
+        self._c_rejected = r.counter(
+            "snn_requests_rejected_total", "requests refused at admission")
+        self._c_waves = r.counter(
+            "snn_waves_total", "waves run, by resident program", ("backend",))
+        self._c_spikes = r.counter(
+            "snn_spikes_out_total", "rate-decoded output spikes")
+        self._c_slot_ticks = r.counter(
+            "snn_slot_ticks_total", "slot-ticks executed (slots x ticks)")
+        self._c_overflow = r.counter(
+            "snn_event_overflow_ticks_total",
+            "event-backend ticks that overflowed k_active to dense fallback")
+        self._c_dw = r.counter(
+            "snn_weight_delta_l1_total", "summed |dw| applied by plasticity")
+        self._g_queue = r.gauge("snn_queue_depth", "requests awaiting a wave")
+        self._g_goodput = r.gauge(
+            "snn_slot_ticks_per_s", "goodput of the last serve() call")
+        self._h_ttft = r.histogram(
+            "snn_ttft_seconds", "submit-to-first-output latency")
+        self._h_wave = r.histogram(
+            "snn_wave_seconds", "wave wall time, by resident program",
+            ("backend",))
 
     @property
     def compiles(self) -> int:
@@ -351,7 +394,13 @@ class SNNServer:
 
         Event waves vmap the engine's fan-in gather path -- pure gathers,
         no data-dependent control flow, so the slot axis lowers exactly
-        like the dense program's."""
+        like the dense program's.
+
+        With ``telemetry`` on, a per-slot
+        :class:`~repro.obs.telemetry.TickTelemetry` rides the scan carry
+        and is appended to the return tuple; it covers the full
+        ``max_ticks`` rollout (ticks past a request's budget included --
+        they run, they just don't count or learn)."""
         from repro.core.network import SNNState
         from repro.plasticity import PlasticityState
 
@@ -365,17 +414,22 @@ class SNNServer:
             st = SNNState.zeros((), N)
             pst = PlasticityState.zeros((), N)
             nbrs = None if fi is None else EventFanIn(idx=fi, mask=fm)
-            (_, _, w2), raster = engine.learning_rollout(
+            out = engine.learning_rollout(
                 p, st, pst, ext, T, rewards=rew, plastic_c=pc,
                 learn_until=until, neighbors=nbrs)
+            if self.telemetry:
+                (_, _, w2), raster, telem = out
+                return raster, w2, telem           # (T, N), (N, N), scalars
+            (_, _, w2), raster = out
             return raster, w2                      # (T, N), (N, N)
 
-        raster, w2 = jax.vmap(per_slot)(params, ext_seq, plastic_c, rewards,
-                                        budget, fan_idx, fan_mask)
+        out = jax.vmap(per_slot)(params, ext_seq, plastic_c, rewards,
+                                 budget, fan_idx, fan_mask)
+        raster, w2 = out[:2]
         # Per-request tick budgets: runtime masks, not shapes.
         tmask = (jnp.arange(T)[None, :] < budget[:, None]).astype(raster.dtype)
         counts = (raster * tmask[:, :, None]).sum(axis=1)   # (S, N) rate code
-        return counts, w2
+        return (counts, w2, out[2]) if self.telemetry else (counts, w2)
 
     # -- wave assembly (host side) ----------------------------------------
 
@@ -413,8 +467,21 @@ class SNNServer:
         backends = {self.tenants[r.tenant].backend for r in reqs}
         if len(backends) != 1:
             raise ValueError(f"wave mixes backends {sorted(backends)}")
-        run = self._run_for(backends.pop())
-        counts, w2 = jax.block_until_ready(run(*self._assemble(reqs)))
+        backend = backends.pop()
+        run = self._run_for(backend)
+        with span(f"snn/wave/{backend}", histogram=self._h_wave,
+                  backend=backend):
+            out = jax.block_until_ready(run(*self._assemble(reqs)))
+        self._c_waves.inc(backend=backend)
+        self._c_slot_ticks.inc(self.slots * self.max_ticks)
+        if self.telemetry:
+            counts, w2, telem = out
+            tel = jax.tree.map(np.asarray, telem)
+            self._c_overflow.inc(float(tel.overflow.sum()))
+            self._c_dw.inc(float(tel.dw_l1.sum()))
+        else:
+            counts, w2 = out
+            tel = None
         now = time.time()
         counts = np.asarray(counts)
         for i, r in enumerate(reqs):
@@ -425,29 +492,96 @@ class SNNServer:
             r.counts = out
             r.pred = int(out.argmax())
             r.t_first = r.t_done = now
+            if tel is not None:
+                self._observe_slot(t, tel, i)
             if t.plastic:
                 # Register write-back: the tenant's next wave starts from
                 # the weights this wave learned (still fabric-shaped).
                 t.params = dataclasses.replace(t.params, w=w2[i])
 
+    def _observe_slot(self, t: Tenant, tel, i: int) -> None:
+        """Fold slot ``i`` of a wave's telemetry into the tenant ledger."""
+        o = self._tenant_obs.setdefault(t.name, {
+            "requests": 0, "ticks": 0, "spikes": 0.0, "v_max": 0.0,
+            "ref_sum": 0.0, "overflow_ticks": 0, "dw_l1": 0.0})
+        o["requests"] += 1
+        o["ticks"] += int(tel.ticks[i])
+        o["spikes"] += float(tel.spikes[i])
+        o["v_max"] = max(o["v_max"], float(tel.v_max[i]))
+        o["ref_sum"] += float(tel.ref_sum[i])
+        o["overflow_ticks"] += int(tel.overflow[i])
+        o["dw_l1"] += float(tel.dw_l1[i])
+
+    def tenant_report(self) -> Dict[str, Dict]:
+        """Per-tenant activity from accumulated wave telemetry.
+
+        ``spike_rate`` is spikes per live-neuron-tick (padded fabric
+        neurons carry an unreachable threshold, so every spike belongs
+        to one of the tenant's ``n`` live neurons); the refractory
+        occupancy is rescaled from the fabric axis to live neurons the
+        same way. Empty when the server was built with
+        ``telemetry=False`` or has served nothing yet.
+        """
+        rep: Dict[str, Dict] = {}
+        for name in sorted(self._tenant_obs):
+            o, t = self._tenant_obs[name], self.tenants[name]
+            ticks = o["ticks"]
+            rescale = self.n_max / max(1, t.n)
+            rep[name] = {
+                "requests": o["requests"],
+                "ticks": ticks,
+                "spikes": o["spikes"],
+                "spike_rate": round(o["spikes"] / max(1, ticks * t.n), 4),
+                "v_max": round(o["v_max"], 4),
+                "refractory_occupancy": round(
+                    o["ref_sum"] / max(1, ticks) * rescale, 4),
+                "overflow_ticks": o["overflow_ticks"],
+                "dw_l1": round(o["dw_l1"], 3),
+                "plastic": t.plastic,
+                "backend": t.backend,
+            }
+        return rep
+
+    def _empty_stats(self, rejected: int) -> Dict:
+        """A well-formed zero report: no waves ran, nothing was served."""
+        return {"n_requests": 0, "requests_served": 0,
+                "requests_rejected": rejected,
+                "n_tenants": 0, "waves": 0, "ticks": 0,
+                "spikes_out": 0.0, "wall_s": 0.0, "spikes_per_s": 0.0,
+                "slot_ticks_per_s": 0.0, "mean_ttft_s": 0.0,
+                "compiles": self.compiles,
+                "recompiles_after_warmup": sum(
+                    max(0, c - 1) for c in self._compiles.values()),
+                "backends": {}, "preds": {}}
+
     def serve(self, requests: List[SNNRequest]) -> Dict:
         """Wave admission over a request queue + the LM server's stats.
 
-        Admission first groups the queue by tenant backend (waves are
-        backend-homogeneous: a sparse tenant rides the event program, a
-        dense one the default program -- each program compiled once,
-        ever), then keeps at most ONE request per *plastic* tenant in
-        any wave: two slots learning from the same pre-wave registers
-        would race on the write-back (last slot wins, first request's
-        learning silently lost). Deferred duplicates ride the next wave,
-        which starts from the weights this wave learned.
+        Admission first rejects requests naming an unregistered tenant
+        (counted, logged, never a KeyError mid-wave), then groups the
+        queue by tenant backend (waves are backend-homogeneous: a sparse
+        tenant rides the event program, a dense one the default program
+        -- each program compiled once, ever), then keeps at most ONE
+        request per *plastic* tenant in any wave: two slots learning
+        from the same pre-wave registers would race on the write-back
+        (last slot wins, first request's learning silently lost).
+        Deferred duplicates ride the next wave, which starts from the
+        weights this wave learned.
+
+        The returned per-call stats dict is a *view* over this call;
+        ``server.registry`` accumulates the same quantities cumulatively
+        across calls (Prometheus text via ``registry.to_prometheus()``).
+        An empty or fully-rejected queue returns the zero report with
+        ``requests_served: 0`` -- never a ``np.mean([])`` warning.
         """
+        rejected = [r for r in requests if r.tenant not in self.tenants]
+        if rejected:
+            self._c_rejected.inc(len(rejected))
+            log_event("snn_requests_rejected", n=len(rejected),
+                      tenants=sorted({r.tenant for r in rejected}))
+        requests = [r for r in requests if r.tenant in self.tenants]
         if not requests:
-            return {"n_requests": 0, "n_tenants": 0, "waves": 0, "ticks": 0,
-                    "spikes_out": 0.0, "wall_s": 0.0, "spikes_per_s": 0.0,
-                    "slot_ticks_per_s": 0.0, "mean_ttft_s": 0.0,
-                    "compiles": self.compiles,
-                    "recompiles_after_warmup": 0, "preds": {}}
+            return self._empty_stats(len(rejected))
         for r in requests:
             r.t_submit = time.time()
         done: List[SNNRequest] = []
@@ -458,6 +592,7 @@ class SNNServer:
             queue = [r for r in requests
                      if self.tenants[r.tenant].backend == backend]
             while queue:
+                self._g_queue.set(len(queue))
                 wave, deferred, plastic_in_wave = [], [], set()
                 for r in queue:
                     t = self.tenants[r.tenant]
@@ -477,21 +612,30 @@ class SNNServer:
                 self.run_wave(wave)
                 done.extend(r for r in wave if r.rid >= 0)
                 waves += 1
+        self._g_queue.set(0)
         total_spikes = float(sum(r.counts.sum() for r in done))
         t0 = min(r.t_submit for r in done)
         t1 = max(r.t_done for r in done)
+        goodput = round(
+            waves * self.max_ticks * self.slots / max(1e-9, t1 - t0), 1)
+        self._c_requests.inc(len(done))
+        self._c_spikes.inc(total_spikes)
+        self._g_goodput.set(goodput)
+        for r in done:
+            self._h_ttft.observe(r.t_first - r.t_submit)
         return {
             "n_requests": len(done),
+            "requests_served": len(done),
+            "requests_rejected": len(rejected),
             "n_tenants": len({r.tenant for r in done}),
             "waves": waves,
             "ticks": waves * self.max_ticks,
             "spikes_out": total_spikes,
             "wall_s": round(t1 - t0, 3),
             "spikes_per_s": round(total_spikes / max(1e-9, t1 - t0), 1),
-            "slot_ticks_per_s": round(
-                waves * self.max_ticks * self.slots / max(1e-9, t1 - t0), 1),
+            "slot_ticks_per_s": goodput,
             "mean_ttft_s": round(float(np.mean(
-                [r.t_first - r.t_submit for r in done])), 4),
+                [r.t_first - r.t_submit for r in done])), 4) if done else 0.0,
             "compiles": self.compiles,
             # One trace per resident program (per backend) is warmup;
             # anything past that is a retrace regression.
@@ -578,9 +722,25 @@ def serve_snn_main(cfg, args) -> Dict:
     print(f"serving SNN fabric n_max={server.n_max}: {len(names)} resident "
           f"tenants, {args.slots} slots, {args.requests} requests")
     reqs = make_demo_requests(server, names, max(args.requests, len(names)))
-    stats = server.serve(reqs)
+    with profile(getattr(args, "profile", None)):
+        stats = server.serve(reqs)
     for k, v in stats.items():
         print(f"{k}: {v}")
+    report = server.tenant_report()
+    if report:
+        print("\nper-tenant activity (wave telemetry):")
+        for name, row in report.items():
+            print(f"  {name}: " + ", ".join(
+                f"{k}={v}" for k, v in row.items()))
+    print("\nmetrics exposition:")
+    print(server.registry.to_prometheus())
+    out = getattr(args, "metrics_out", None)
+    if out:
+        import json
+
+        with open(out, "w") as fh:
+            json.dump(server.registry.to_dict(), fh, indent=1, sort_keys=True)
+        print(f"wrote metrics JSON to {out}")
     assert stats["recompiles_after_warmup"] == 0, "tenant swap recompiled!"
     return stats
 
@@ -593,6 +753,12 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="capture a jax.profiler trace of the serve run "
+                         "into DIR (view with TensorBoard/Perfetto)")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="dump the metrics registry as JSON to PATH "
+                         "(SNN server only)")
     args = ap.parse_args(argv)
 
     bundle = get_bundle(args.arch)
@@ -613,7 +779,9 @@ def main(argv=None):
             prompt = rng.integers(0, cfg.vocab_size, (plen,))
         reqs.append(Request(rid=i, prompt=prompt.astype(np.int32),
                             max_new=args.max_new))
-    stats = serve(cfg, params, reqs, slots=args.slots, max_len=args.max_len)
+    with profile(args.profile):
+        stats = serve(cfg, params, reqs, slots=args.slots,
+                      max_len=args.max_len)
     for k, v in stats.items():
         print(f"{k}: {v}")
     return stats

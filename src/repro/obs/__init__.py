@@ -1,0 +1,25 @@
+"""Observability: on-device tick telemetry + host-side metrics/log/tracing.
+
+Two tiers (DESIGN.md §11):
+
+* **Tier A -- on-device**: :class:`~repro.obs.telemetry.TickTelemetry`, a
+  carry-resident accumulator the :class:`~repro.core.engine.TickEngine`
+  threads through the tick scan when its static ``telemetry=True`` flag
+  is set. Pure reductions inside the compiled program -- no host syncs,
+  vmap-safe (the multi-tenant server gets per-slot series for free), and
+  bit-free when off: ``telemetry=False`` programs compile to HLO
+  identical to the pre-observability engine (pinned in tests/test_obs.py).
+
+* **Tier B -- host-side**: a dependency-free metrics registry
+  (:mod:`repro.obs.metrics`: counters / gauges / histograms with
+  Prometheus text exposition and JSON dump), structured event logging
+  (:mod:`repro.obs.log`), and tracing helpers
+  (:mod:`repro.obs.tracing`: ``jax.profiler`` spans + ``--profile``
+  capture for the serve and bench CLIs).
+"""
+from repro.obs.log import EventLog, get_event_log, log_event  # noqa: F401
+from repro.obs.metrics import (  # noqa: F401
+    Counter, Gauge, Histogram, MetricsRegistry, get_registry,
+)
+from repro.obs.telemetry import TickTelemetry  # noqa: F401
+from repro.obs.tracing import profile, span, trace_scope  # noqa: F401

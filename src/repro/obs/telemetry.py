@@ -1,0 +1,152 @@
+"""On-device tick telemetry: carry-resident reductions inside the scan.
+
+The paper pitches the processor as a research platform with runtime
+visibility into the live fabric (spike activity, membrane state over the
+UART link). :class:`TickTelemetry` is that visibility for the TPU
+restatement: a small pytree of per-rollout accumulators that rides the
+:class:`~repro.core.engine.TickCarry` when the engine's static
+``telemetry=True`` flag is set.
+
+Design constraints (all pinned in tests/test_obs.py):
+
+* **Zero cost when off.** Telemetry is gated by a *static* engine flag
+  and an optional carry slot (``None`` leaves vanish from the pytree),
+  so ``telemetry=False`` programs lower to HLO byte-identical to the
+  pre-observability engine.
+
+* **Reductions only, no host syncs.** Every update is a per-tick
+  reduction over the neuron axis into batch-shaped accumulators; the
+  scan never materializes a per-tick series and never leaves the device.
+
+* **vmap-transparent.** Accumulators keep the state's batch shape, so
+  the multi-tenant server's slot vmap yields per-slot (= per-tenant)
+  telemetry with no extra code.
+
+The numbers come off-device exactly once, at :meth:`TickTelemetry.summary`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TickTelemetry:
+    """Per-rollout accumulators; every leaf is batch-shaped ``(...,)``.
+
+    Attributes:
+      ticks: ticks accumulated so far (i32).
+      spikes: total spikes emitted (``sum_t sum_n y``) -- equals
+        ``raster.sum()`` of the same rollout, pinned in tests.
+      v_sum: sum over ticks of the mean membrane potential (divide by
+        ``ticks`` for the time-averaged mean).
+      v_max: running max membrane potential observed after any tick.
+      ref_sum: sum over ticks of the refractory-occupancy fraction
+        (``mean_n 1{r > 0}``); divide by ``ticks`` for mean occupancy.
+      overflow: event-backend overflow ticks -- ticks whose spike count
+        exceeded ``k_active`` and took the dense fallback (always 0 for
+        dense backends and the event fan-in gather path).
+      dw_l1: accumulated ``sum |dw|`` from the plasticity hook (0 when
+        frozen) -- the L1 norm of the whole weight-update stream.
+      dw_sq: accumulated ``sum dw^2``; ``sqrt`` of it is the L2 norm of
+        the update stream.
+    """
+
+    ticks: jax.Array
+    spikes: jax.Array
+    v_sum: jax.Array
+    v_max: jax.Array
+    ref_sum: jax.Array
+    overflow: jax.Array
+    dw_l1: jax.Array
+    dw_sq: jax.Array
+
+    @staticmethod
+    def zeros(batch_shape=()) -> "TickTelemetry":
+        shape = tuple(batch_shape)
+        f = lambda: jnp.zeros(shape, jnp.float32)
+        return TickTelemetry(
+            ticks=jnp.zeros(shape, jnp.int32), spikes=f(), v_sum=f(),
+            v_max=f(), ref_sum=f(), overflow=jnp.zeros(shape, jnp.int32),
+            dw_l1=f(), dw_sq=f())
+
+    def accumulate(
+        self,
+        lif_state,
+        *,
+        overflow_inc: Optional[jax.Array] = None,
+        dw: Optional[jax.Array] = None,
+    ) -> "TickTelemetry":
+        """Fold one tick's outputs in (pure reductions over the neuron axis).
+
+        Args:
+          lif_state: the post-tick :class:`~repro.core.lif.LIFState`.
+          overflow_inc: optional batch-shaped i32 increment (event backend:
+            1 on ticks that overflowed ``k_active`` into the dense fallback).
+          dw: optional weight delta ``w_new - w_old`` from the plasticity
+            hook (any shape; reduced to scalars and broadcast).
+        """
+        y, v, r = lif_state.y, lif_state.v, lif_state.r
+        n = y.shape[-1]
+        # One variadic reduce for all four neuron-axis statistics: a
+        # single kernel per tick instead of four (the scan body's per-op
+        # dispatch is the telemetry overhead the bench gate watches, not
+        # the arithmetic).
+        zero = jnp.zeros((), jnp.float32)
+        ninf = jnp.asarray(-jnp.inf, jnp.float32)
+        s_y, s_v, m_v, s_r = jax.lax.reduce(
+            (y.astype(jnp.float32), v.astype(jnp.float32),
+             v.astype(jnp.float32), (r > 0).astype(jnp.float32)),
+            (zero, zero, ninf, zero),
+            lambda a, b: (a[0] + b[0], a[1] + b[1],
+                          jnp.maximum(a[2], b[2]), a[3] + b[3]),
+            (y.ndim - 1,))
+        dw_l1, dw_sq = self.dw_l1, self.dw_sq
+        if dw is not None:
+            dw_l1 = dw_l1 + jnp.abs(dw).sum()
+            dw_sq = dw_sq + jnp.square(dw).sum()
+        overflow = self.overflow
+        if overflow_inc is not None:
+            overflow = overflow + overflow_inc
+        return TickTelemetry(
+            ticks=self.ticks + 1,
+            spikes=self.spikes + s_y,
+            v_sum=self.v_sum + s_v / n,
+            v_max=jnp.maximum(self.v_max, m_v),
+            ref_sum=self.ref_sum + s_r / n,
+            overflow=overflow,
+            dw_l1=dw_l1,
+            dw_sq=dw_sq)
+
+    # -- host-side readout -------------------------------------------------
+
+    def summary(self, n: int) -> Dict[str, float]:
+        """Reduce to host floats (the one device->host hop).
+
+        Args:
+          n: live neuron count, for the spike-rate normalization
+            (``spikes / (ticks * n)`` -- mean spikes per neuron per tick).
+        """
+        import numpy as np
+
+        leaf = lambda a: np.asarray(a)
+        ticks = float(leaf(self.ticks).max()) if leaf(self.ticks).size else 0.0
+        spikes = float(leaf(self.spikes).sum())
+        batch = max(1, int(leaf(self.spikes).size))
+        denom = max(1.0, ticks * n * batch)
+        return {
+            "ticks": ticks,
+            "spikes": spikes,
+            "spike_rate": spikes / denom,
+            "v_mean": float(leaf(self.v_sum).mean()) / max(1.0, ticks),
+            "v_max": float(leaf(self.v_max).max()),
+            "refractory_occupancy":
+                float(leaf(self.ref_sum).mean()) / max(1.0, ticks),
+            "overflow_ticks": float(leaf(self.overflow).sum()),
+            "dw_l1": float(leaf(self.dw_l1).sum()),
+            "dw_l2": float(np.sqrt(leaf(self.dw_sq).sum())),
+        }

@@ -279,6 +279,20 @@ class TestPlasticTenancy:
         server = _server()
         stats = server.serve([])
         assert stats["n_requests"] == 0 and stats["waves"] == 0
+        assert stats["requests_served"] == 0
+        assert stats["mean_ttft_s"] == 0.0  # never np.mean([])
+
+    def test_serve_fully_rejected_queue(self):
+        """Every request names an unknown tenant: zero report, counted
+        rejections, no KeyError mid-wave."""
+        server = _server()
+        bad = [SNNRequest(rid=i, tenant=f"ghost-{i}",
+                          ext=np.zeros((4, 4), np.float32), n_ticks=4)
+               for i in range(3)]
+        stats = server.serve(bad)
+        assert stats["requests_served"] == 0
+        assert stats["requests_rejected"] == 3
+        assert stats["waves"] == 0 and stats["mean_ttft_s"] == 0.0
 
     def test_rectangular_w_in_pads(self):
         import dataclasses as dc
