@@ -56,6 +56,7 @@ class ModelConfig:
     n_ticks: int = 4
     snn_mode: str = "fixed_leak"
     snn_backend: str = "jnp"         # jnp | pallas | pallas_fused | event (TickEngine)
+    snn_dispatch: str = "auto"       # event-backend strategy: auto | fan_in | topk | dense
     snn_density: float = 0.5         # topology density for free-form fabrics
     snn_rate: float = 0.1            # target input spike rate (event operating point)
     # numerics

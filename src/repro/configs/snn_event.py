@@ -25,10 +25,11 @@ FULL = ModelConfig(
     n_ticks=32,
     snn_mode="fixed_leak",
     snn_backend="event",
+    snn_dispatch="auto",     # dispatch_policy.plan picks the formulation
     snn_density=0.05,
     snn_rate=0.05,
     dtype="float32",
-    source="DESIGN.md §10 event dispatch of paper §II mux fabric",
+    source="DESIGN.md §10/§12 event dispatch of paper §II mux fabric",
 )
 
 SMOKE = ModelConfig(
@@ -39,6 +40,7 @@ SMOKE = ModelConfig(
     n_ticks=16,
     snn_mode="fixed_leak",
     snn_backend="event",
+    snn_dispatch="auto",
     snn_density=0.05,
     snn_rate=0.05,
     head_pad=1,

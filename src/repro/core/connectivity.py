@@ -214,3 +214,45 @@ def padded_fan_in(c: np.ndarray, cap: Optional[int] = None) -> PaddedNeighbors:
     data-dependent control flow, FLOPs ``B*n*cap`` instead of ``B*n*n``.
     """
     return _padded_lists(c, cap, "in")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConnectivityStats:
+    """Topology statistics the dispatch policy decides from.
+
+    ``padding_fraction_in``/``_out`` are the air fractions of the
+    *tightest* padded layouts (cap == max degree): how much of the
+    fan-in gather / fan-out scatter would multiply zeros.  A hub-heavy
+    topology has a large max/mean gap and a padding fraction near 1 --
+    exactly where the fixed-cap gather stops paying and the policy
+    should pick the dense product or the spike-list path instead.
+    """
+
+    n: int
+    n_edges: int
+    density: float
+    max_fan_in: int
+    mean_fan_in: float
+    max_fan_out: int
+    mean_fan_out: float
+    padding_fraction_in: float
+    padding_fraction_out: float
+
+
+def stats(c: np.ndarray) -> ConnectivityStats:
+    """Host-side summary of a concrete connection list (the dispatch
+    policy's trace-time input -- see :mod:`repro.core.dispatch_policy`)."""
+    validate(np.asarray(c) > 0 if np.asarray(c).dtype != np.bool_ else c)
+    cb = np.asarray(c) > 0
+    n = cb.shape[0]
+    fi = cb.sum(axis=0)
+    fo = cb.sum(axis=1)
+    edges = int(cb.sum())
+    max_fi = int(fi.max()) if n else 0
+    max_fo = int(fo.max()) if n else 0
+    frac = lambda mx: 1.0 - edges / max(1, n * max(1, mx))
+    return ConnectivityStats(
+        n=n, n_edges=edges, density=edges / max(1, n * n),
+        max_fan_in=max_fi, mean_fan_in=float(fi.mean()) if n else 0.0,
+        max_fan_out=max_fo, mean_fan_out=float(fo.mean()) if n else 0.0,
+        padding_fraction_in=frac(max_fi), padding_fraction_out=frac(max_fo))

@@ -75,12 +75,18 @@ class TickCarry:
       telem: :class:`~repro.obs.telemetry.TickTelemetry` accumulators, or
         None when the engine's ``telemetry`` flag is off (the leaf then
         vanishes from the pytree -- zero carry growth, identical HLO).
+      policy: adaptive-dispatch hysteresis bit (scalar bool), or None
+        when the engine has no per-tick knee armed (``event_knee``).
+        True means the previous tick ran the dense arm for speed; the
+        knee's release threshold then drops to ``hysteresis * knee`` so
+        activity hovering at the knee doesn't flip the branch per tick.
     """
 
     state: SNNState
     plast: Optional[Any] = None
     w: Optional[jax.Array] = None
     telem: Optional[Any] = None
+    policy: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,10 +107,33 @@ class TickEngine:
       plasticity_backend: backend for the plasticity hook; defaults to
         following ``backend``.
       event_k_active: spike-slot budget for the event backend's top-k
-        dispatch (None -> ``n // 8``, floored at 8); rows spiking past
-        it fall back to the dense product per ``event_overflow``.
+        dispatch (None -> ``n // 8``, floored at 8, via
+        :func:`repro.core.dispatch_policy.resolve_k_active`); rows
+        spiking past it fall back to the dense product per
+        ``event_overflow``.
       event_overflow: "fallback" (dense product on overflow ticks,
         exact at any rate), "strict" (checkify error) or "unchecked".
+      event_dispatch: the event backend's synaptic-input formulation --
+        "auto" (fan-in gather when ``neighbors`` is provided, else the
+        top-k spike list; the :mod:`~repro.core.dispatch_policy` plan
+        picks smarter), "fan_in" (requires ``neighbors``), "topk"
+        (spike-list gather) or "dense" (masked product; still the event
+        backend: it keeps the diagonal-drive elimination and telemetry,
+        it just computes the synaptic product densely because the
+        topology is past the gather knee on this platform).
+      event_knee: per-tick adaptive switch for the "topk" strategy:
+        ticks whose max batch-row spike count exceeds this run the
+        dense product instead of the spike-list gather (both arms
+        bit-exact -- the knee is pure speed policy). None disables
+        in-scan switching. See :func:`repro.core.dispatch_policy.
+        knee_spikes` for the calibrated default.
+      event_hysteresis: release fraction for the knee: after a dense
+        tick, activity must fall below ``hysteresis * knee`` before the
+        engine switches back to the spike-list arm.
+      event_ext_diag: the external drive ``ext @ w_in`` is computed as
+        the elementwise ``ext * diag(w_in)`` -- set (by the dispatch
+        plan) only when ``w_in`` is diagonal, where it is bit-identical
+        and saves a full ``n x n`` GEMM per tick.
       telemetry: static flag; when True the carry gains a
         :class:`~repro.obs.telemetry.TickTelemetry` slot and every tick
         folds its reductions in (see the module docstring). When False
@@ -119,7 +148,27 @@ class TickEngine:
     plasticity_backend: Optional[str] = None
     event_k_active: Optional[int] = None
     event_overflow: str = "fallback"
+    event_dispatch: str = "auto"
+    event_knee: Optional[int] = None
+    event_hysteresis: float = 0.75
+    event_ext_diag: bool = False
     telemetry: bool = False
+
+    def _event_strategy(self, neighbors: Optional[Any]) -> str:
+        """Resolve ``event_dispatch`` against what the call provided."""
+        strategy = self.event_dispatch
+        if strategy == "auto":
+            strategy = "fan_in" if neighbors is not None else "topk"
+        if strategy not in ("fan_in", "topk", "dense"):
+            raise ValueError(
+                f"event_dispatch must be auto|fan_in|topk|dense, got "
+                f"{self.event_dispatch!r}")
+        if strategy == "fan_in" and neighbors is None:
+            raise ValueError(
+                "event_dispatch='fan_in' needs fan-in neighbor lists: pass "
+                "neighbors=EventFanIn.from_dense(wc, c) (or let "
+                "dispatch_policy.plan build them)")
+        return strategy
 
     # -- the single tick body ---------------------------------------------
 
@@ -194,6 +243,8 @@ class TickEngine:
 
         slot = jnp.mod(st.tick, max_delay)
         overflow_inc = None
+        policy_inc = None
+        policy_out = None
 
         if delays is None:
             # -- delay-line read: spikes scheduled to arrive this tick.
@@ -214,25 +265,105 @@ class TickEngine:
                 #    are gathered (the mux fabric routes nothing for silent
                 #    neurons). ``wc`` is the hoisted matrix on the frozen
                 #    path and this tick's carry-derived matrix when learning.
+                #    The formulation ("fan_in" gather | "topk" spike list |
+                #    "dense" product) is the trace-time strategy; the "topk"
+                #    strategy additionally arbitrates per tick at the knee.
+                from repro.core import dispatch_policy
                 from repro.kernels import ops  # local import; CPU path is jnp
 
-                with jax.named_scope("tick/event"):
-                    lif_state = ops.event_lif_step(
-                        st.lif, arriving, params, ext, wc,
-                        k_active=self.event_k_active, fan_in=neighbors,
-                        overflow=self.event_overflow,
-                        mode=self.mode, surrogate=self.surrogate)
-                if self.telemetry and carry.telem is not None \
-                        and neighbors is None:
-                    # Mirror ops.event_synaptic_input's fallback trigger:
-                    # ANY batch row spiking past k_active flips the whole
-                    # tick to the dense product (lax.cond). The fan-in
-                    # gather path is exact by construction (no overflow).
-                    n = arriving.shape[-1]
-                    k = min(self.event_k_active or ops.default_k_active(n), n)
-                    over = jnp.any(jnp.sum(arriving > 0, axis=-1) > k)
-                    overflow_inc = jnp.broadcast_to(
-                        over.astype(jnp.int32), carry.telem.overflow.shape)
+                strategy = self._event_strategy(neighbors)
+                n = arriving.shape[-1]
+                k = dispatch_policy.resolve_k_active(n, self.event_k_active)
+                telemetry = self.telemetry and carry.telem is not None
+
+                def _dense_step():
+                    # The dense arm of the event backend: the masked product
+                    # plus the (possibly diagonal-eliminated) drive. With
+                    # event_ext_diag=False this is bit-identical to the
+                    # "jnp" backend's tick; with it, identical anyway when
+                    # w_in is diagonal (adding exact zeros is a f32 no-op).
+                    syn = arriving @ wc
+                    if ext is not None:
+                        syn = syn + (
+                            ext * jnp.diagonal(params.w_in)
+                            if self.event_ext_diag else ext @ params.w_in)
+                    return lif_step(st.lif, syn, params.lif, mode=self.mode,
+                                    surrogate=self.surrogate)
+
+                with jax.named_scope(f"tick/event/{strategy}"):
+                    if strategy == "dense":
+                        lif_state = _dense_step()
+                    elif strategy == "fan_in":
+                        # Exact by construction (no overflow: every in-edge
+                        # is always read), safe under vmap.
+                        lif_state = ops.event_lif_step(
+                            st.lif, arriving, params, ext, wc,
+                            k_active=self.event_k_active, fan_in=neighbors,
+                            overflow=self.event_overflow,
+                            mode=self.mode, surrogate=self.surrogate,
+                            ext_diag=self.event_ext_diag)
+                    elif self.event_knee is None:
+                        lif_state = ops.event_lif_step(
+                            st.lif, arriving, params, ext, wc,
+                            k_active=self.event_k_active, fan_in=None,
+                            overflow=self.event_overflow,
+                            mode=self.mode, surrogate=self.surrogate,
+                            ext_diag=self.event_ext_diag)
+                        if telemetry:
+                            # Mirror ops.event_synaptic_input's fallback
+                            # trigger: ANY batch row spiking past k_active
+                            # flips the whole tick to the dense product.
+                            over = jnp.any(
+                                jnp.sum(arriving > 0, axis=-1) > k)
+                            overflow_inc = jnp.broadcast_to(
+                                over.astype(jnp.int32),
+                                carry.telem.overflow.shape)
+                    else:
+                        # -- adaptive knee: the spike-list gather's cost is
+                        #    ~spikes * gather_penalty dense-row-equivalents,
+                        #    so past the knee the dense product is simply
+                        #    the faster exact arm. Generalizes the overflow
+                        #    fallback from safety valve to speed policy:
+                        #    overflow (m > k) *must* go dense for bits;
+                        #    the knee band (knee < m <= k) goes dense for
+                        #    ticks/s. Hysteresis: once dense, stay dense
+                        #    until m falls below hysteresis * knee.
+                        if self.event_overflow != "fallback":
+                            raise ValueError(
+                                "event_knee requires event_overflow="
+                                "'fallback' (the knee routes overflow "
+                                "ticks to the dense arm silently, which "
+                                "contradicts strict/unchecked semantics)")
+                        m = jnp.max(jnp.sum(arriving > 0, axis=-1))
+                        over_k = m > k
+                        hi = min(int(self.event_knee), k)
+                        lo = int(hi * self.event_hysteresis)
+                        prev = (carry.policy if carry.policy is not None
+                                else jnp.zeros((), jnp.bool_))
+                        dense_mode = (m > hi) | (prev & (m > lo))
+                        take_dense = over_k | dense_mode
+                        # Inside the event arm m <= min(knee, k): every
+                        # spiking row fits the k top-k slots, so the
+                        # unchecked gather is exact (the guard IS the
+                        # overflow check -- no second cond inside).
+                        lif_state = jax.lax.cond(
+                            take_dense,
+                            _dense_step,
+                            lambda: ops.event_lif_step(
+                                st.lif, arriving, params, ext, wc,
+                                k_active=k, fan_in=None,
+                                overflow="unchecked",
+                                mode=self.mode, surrogate=self.surrogate,
+                                ext_diag=self.event_ext_diag))
+                        if carry.policy is not None:
+                            policy_out = dense_mode
+                        if telemetry:
+                            overflow_inc = jnp.broadcast_to(
+                                over_k.astype(jnp.int32),
+                                carry.telem.overflow.shape)
+                            policy_inc = jnp.broadcast_to(
+                                (take_dense & ~over_k).astype(jnp.int32),
+                                carry.telem.policy_dense.shape)
             else:
                 with jax.named_scope("tick/jnp"):
                     syn = arriving @ wc
@@ -269,11 +400,12 @@ class TickEngine:
         state2 = SNNState(lif=lif_state, delay_buf=delay_buf, tick=st.tick + 1)
         return self._tick_tail(carry, st, state2, w, reward,
                                params, plastic_c, learn_until,
-                               overflow_inc=overflow_inc)
+                               overflow_inc=overflow_inc,
+                               policy=policy_out, policy_inc=policy_inc)
 
     def _tick_tail(
         self, carry, st, state2, w, reward, params, plastic_c, learn_until,
-        overflow_inc=None,
+        overflow_inc=None, policy=None, policy_inc=None,
     ) -> Tuple[TickCarry, jax.Array]:
         """Shared tick tail: optionally run the plasticity datapath, fold
         telemetry, and rebuild the carry.
@@ -287,6 +419,10 @@ class TickEngine:
         learning = carry.w is not None
         lif_state = state2.lif
         telemetry = self.telemetry and carry.telem is not None
+        # Hysteresis slot: updated only by the adaptive knee; every other
+        # path passes the carried bit (usually None) through unchanged so
+        # the carry pytree stays scan-invariant.
+        policy2 = policy if policy is not None else carry.policy
         dw = None
         if learning and self.plasticity is not None:
             from repro.plasticity import rules as plasticity_rules
@@ -310,14 +446,15 @@ class TickEngine:
             if telemetry:
                 dw = w2 - w  # the committed delta (after learn_until gating)
             telem2 = carry.telem.accumulate(
-                lif_state, overflow_inc=overflow_inc,
+                lif_state, overflow_inc=overflow_inc, policy_inc=policy_inc,
                 dw=dw) if telemetry else carry.telem
             return TickCarry(state=state2, plast=pst2, w=w2,
-                             telem=telem2), lif_state.y
+                             telem=telem2, policy=policy2), lif_state.y
         telem2 = carry.telem.accumulate(
-            lif_state, overflow_inc=overflow_inc) if telemetry else carry.telem
+            lif_state, overflow_inc=overflow_inc,
+            policy_inc=policy_inc) if telemetry else carry.telem
         return TickCarry(state=state2, plast=carry.plast, w=carry.w,
-                         telem=telem2), lif_state.y
+                         telem=telem2, policy=policy2), lif_state.y
 
     # -- scan driver -------------------------------------------------------
 
@@ -348,6 +485,12 @@ class TickEngine:
             carry0 = dataclasses.replace(
                 carry0,
                 telem=TickTelemetry.zeros(carry0.state.lif.v.shape[:-1]))
+        if (self.backend == "event" and self.event_knee is not None
+                and carry0.policy is None
+                and self._event_strategy(neighbors) == "topk"):
+            # Seed the hysteresis bit (start in the spike-list arm).
+            carry0 = dataclasses.replace(
+                carry0, policy=jnp.zeros((), jnp.bool_))
         learning = carry0.w is not None
         wc = None
         if not learning and self.backend != "pallas":

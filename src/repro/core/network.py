@@ -38,6 +38,33 @@ from repro.core.network_types import (  # noqa: F401 (back-compat re-exports)
 )
 
 
+def _resolve_dispatch(dispatch, params, state, neighbors):
+    """Turn the ``dispatch`` argument into engine kwargs (+ fan-in lists).
+
+    ``dispatch`` is ``None`` (keep the explicit ``backend``), a
+    :class:`~repro.core.dispatch_policy.DispatchPlan` (use it), the
+    string ``"auto"`` (plan here, from the *concrete* ``params.c`` /
+    ``params.w_in`` -- inside jit these are tracers and the policy
+    raises with a pointer to plan outside), or a literal strategy
+    string (``"fan_in"`` | ``"topk"`` | ``"dense"``) forwarded to the
+    engine's ``event_dispatch`` static.
+    """
+    from repro.core import dispatch_policy
+
+    if isinstance(dispatch, dispatch_policy.DispatchPlan):
+        plan = dispatch
+    elif dispatch == "auto":
+        batch = 1
+        for d in state.lif.v.shape[:-1]:
+            batch *= int(d)
+        plan = dispatch_policy.plan(params.c, w_in=params.w_in, batch=batch)
+    else:
+        return dict(backend="event", event_dispatch=str(dispatch)), neighbors
+    if neighbors is None:
+        neighbors = plan.neighbors
+    return plan.engine_kwargs(), neighbors
+
+
 def step(
     state: SNNState,
     params: SNNParams,
@@ -48,6 +75,7 @@ def step(
     delays: Optional[jax.Array] = None,
     backend: str = "jnp",
     neighbors=None,
+    dispatch=None,
 ) -> SNNState:
     """One synchronous network tick.
 
@@ -65,8 +93,17 @@ def step(
         fan-outs are gathered; :func:`repro.kernels.ops.event_lif_step`).
       neighbors: optional :class:`repro.kernels.ops.EventFanIn` switching
         the "event" backend to its vmap-safe padded fan-in gather path.
+      dispatch: event-dispatch policy -- ``None`` (use ``backend`` as
+        given), ``"auto"`` (plan from the concrete topology via
+        :func:`repro.core.dispatch_policy.plan`; implies the event
+        backend), a :class:`~repro.core.dispatch_policy.DispatchPlan`,
+        or a literal strategy string ("fan_in"|"topk"|"dense").
     """
-    eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend)
+    kw = dict(mode=mode, surrogate=surrogate, backend=backend)
+    if dispatch is not None:
+        dkw, neighbors = _resolve_dispatch(dispatch, params, state, neighbors)
+        kw.update(dkw)
+    eng = TickEngine(**kw)
     return eng.tick(state, params, ext, delays=delays, neighbors=neighbors)
 
 
@@ -82,20 +119,25 @@ def rollout(
     backend: str = "jnp",
     neighbors=None,
     telemetry: bool = False,
+    dispatch=None,
 ):
     """Scan ``n_ticks`` network ticks; returns final state + spike raster.
 
     ``ext_seq`` is ``(n_ticks, ..., n_in)`` or None (autonomous dynamics).
     The raster has shape ``(n_ticks, ..., n)``. The masked matrix ``W*C``
     is hoisted out of the scan (loop-invariant for frozen weights).
-    ``backend``/``neighbors``: see :func:`step`.
+    ``backend``/``neighbors``/``dispatch``: see :func:`step`.
     ``telemetry=True`` (static) appends a
     :class:`repro.obs.telemetry.TickTelemetry` to the return tuple:
     ``(final_state, raster, telemetry)``; off by default and bit-free
     when off (tests/test_obs.py pins the HLO identity).
     """
-    eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend,
-                     telemetry=telemetry)
+    kw = dict(mode=mode, surrogate=surrogate, backend=backend,
+              telemetry=telemetry)
+    if dispatch is not None:
+        dkw, neighbors = _resolve_dispatch(dispatch, params, state, neighbors)
+        kw.update(dkw)
+    eng = TickEngine(**kw)
     return eng.rollout(params, state, ext_seq, n_ticks, delays=delays,
                        neighbors=neighbors)
 
@@ -115,6 +157,7 @@ def learning_rollout(
     plasticity_backend: Optional[str] = None,
     neighbors=None,
     telemetry: bool = False,
+    dispatch=None,
 ):
     """Scan ``n_ticks`` *learning* ticks: the carry holds mutable weights.
 
@@ -147,14 +190,18 @@ def learning_rollout(
         "event" backend's vmap-safe fan-in gather path.
       telemetry: static flag; True appends a
         :class:`repro.obs.telemetry.TickTelemetry` to the return tuple.
+      dispatch: event-dispatch policy (see :func:`step`).
 
     Returns:
       ``((final_state, final_plast_state, final_w), raster)``, plus a
       trailing ``telemetry`` element when ``telemetry=True``.
     """
-    eng = TickEngine(mode=mode, backend=backend, plasticity=plasticity,
-                     plasticity_backend=plasticity_backend,
-                     telemetry=telemetry)
+    kw = dict(mode=mode, backend=backend, plasticity=plasticity,
+              plasticity_backend=plasticity_backend, telemetry=telemetry)
+    if dispatch is not None:
+        dkw, neighbors = _resolve_dispatch(dispatch, params, state, neighbors)
+        kw.update(dkw)
+    eng = TickEngine(**kw)
     return eng.learning_rollout(params, state, plast_state, ext_seq, n_ticks,
                                 rewards=rewards, plastic_c=plastic_c,
                                 neighbors=neighbors)

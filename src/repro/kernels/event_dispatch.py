@@ -39,6 +39,20 @@ by the caller, not here: the bridge detects it and falls back to the
 dense fused kernel (or raises under checkify), so truncation can never
 silently drop spikes.  All shapes must be pre-padded to block multiples
 on the N axis by the caller.
+
+Two variants share the epilogue:
+
+* :func:`event_lif_dispatch` -- the grid kernel above: the k axis is a
+  grid dimension and the *pipeline* DMAs each spike's fan-out slice
+  (sentinel slots still cost a (zero) DMA + add each).
+* :func:`event_lif_dispatch_db` -- the double-buffered compact-list
+  kernel: grid ``(B, N/bN)`` only; a ``fori_loop`` walks just the
+  ``counts[b]`` *live* spike slots, issuing the weight-row DMA for
+  spike k+1 into the alternate VMEM buffer while accumulating spike k
+  (copy start -> accumulate previous -> wait).  Sentinel slots are
+  never touched -- a quiet batch row costs zero DMAs -- and the weight
+  matrix stays in HBM (``memory_space=ANY``), only the gathered
+  ``(1, bN)`` slices ever landing in VMEM.
 """
 from __future__ import annotations
 
@@ -183,3 +197,164 @@ def event_lif_dispatch(
         ),
         interpret=interpret,
     )(idx.astype(jnp.int32), *inputs)
+
+
+def _event_db_kernel(
+    idx_ref,            # (B, k) i32 in SMEM: spiking row ids (sentinel-padded)
+    counts_ref,         # (B,) i32 in SMEM: live (non-sentinel) slots per row
+    *refs,
+    mode: str,
+    has_drive: bool,
+    block_n: int,
+):
+    """One (b, j) tile: double-buffered walk of the compact spike list."""
+    it = iter(refs)
+    w_hbm_ref = next(it)    # full (K+1, N) weights, memory_space=ANY (HBM)
+    v_ref = next(it)
+    r_in_ref = next(it)
+    drive_ref = next(it) if has_drive else None
+    vth_ref, leak_ref, rref_ref, gain_ref, ibias_ref, vreset_ref = (
+        next(it), next(it), next(it), next(it), next(it), next(it))
+    v_out_ref, r_out_ref, y_out_ref = next(it), next(it), next(it)
+    acc_ref = next(it)      # (1, block_n) f32 VMEM
+    w_buf_ref = next(it)    # (2, 1, block_n) VMEM: the double buffer
+    sem_ref = next(it)      # (2,) DMA semaphores, one per buffer slot
+
+    b = pl.program_id(0)
+    col = pl.program_id(1) * block_n
+    nb = counts_ref[b]
+
+    def copy_k(slot, k):
+        # The gather: spike k's fan-out slice for this column tile,
+        # HBM -> VMEM buffer `slot`.
+        return pltpu.make_async_copy(
+            w_hbm_ref.at[pl.ds(idx_ref[b, k], 1), pl.ds(col, block_n)],
+            w_buf_ref.at[slot],
+            sem_ref.at[slot],
+        )
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(nb > 0)
+    def _warmup():
+        copy_k(0, 0).start()
+
+    def body(k, carry):
+        slot = jax.lax.rem(k, 2)
+
+        @pl.when(k + 1 < nb)
+        def _prefetch():
+            # Start spike k+1's DMA into the other buffer BEFORE waiting
+            # on spike k: the gather overlaps the accumulate.
+            copy_k(1 - slot, k + 1).start()
+
+        copy_k(slot, k).wait()
+        acc_ref[...] += w_buf_ref[slot].astype(jnp.float32)
+        return carry
+
+    # Only the live slots: the loop bound IS the compact-list length, so
+    # sentinel padding costs no DMA, no add -- a quiet row costs nothing.
+    jax.lax.fori_loop(0, nb, body, 0)
+
+    v = v_ref[...].astype(jnp.float32)
+    r = r_in_ref[...]
+    drive = drive_ref[...].astype(jnp.float32) if has_drive else None
+    v_new, r_new, spiked = _lif_epilogue(
+        acc_ref[...], v, r, drive,
+        vth_ref[...].astype(jnp.float32),
+        leak_ref[...].astype(jnp.float32),
+        rref_ref[...],
+        gain_ref[...].astype(jnp.float32),
+        ibias_ref[...].astype(jnp.float32),
+        vreset_ref[...].astype(jnp.float32),
+        mode,
+    )
+    v_out_ref[...] = v_new.astype(v_out_ref.dtype)
+    r_out_ref[...] = r_new.astype(r_out_ref.dtype)
+    y_out_ref[...] = spiked.astype(y_out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_n", "interpret"),
+)
+def event_lif_dispatch_db(
+    idx: jax.Array,
+    w: jax.Array,
+    v: jax.Array,
+    r: jax.Array,
+    drive: Optional[jax.Array],
+    v_th: jax.Array,
+    leak: jax.Array,
+    r_ref: jax.Array,
+    gain: jax.Array,
+    i_bias: jax.Array,
+    v_reset: jax.Array,
+    *,
+    counts: jax.Array,
+    mode: str = "fixed_leak",
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Double-buffered compact-spike-list event tick (one ``pallas_call``).
+
+    Same contract as :func:`event_lif_dispatch` plus ``counts``: (B,) i32,
+    the number of live (non-sentinel) slots at the *front* of each row of
+    ``idx`` (the tie-stable top-k packs real spikes first, so the compact
+    list is just the prefix).  The kernel walks only that prefix with a
+    two-slot VMEM buffer: spike k+1's weight-row DMA is in flight while
+    spike k accumulates.  Sentinel slots cost nothing at all (the grid
+    kernel pays a zero-row DMA + add for each).
+
+    Returns ``(v', r', y')`` each (B, N).
+    """
+    B, k_active = idx.shape
+    N = w.shape[1]
+    if N % block_n:
+        raise ValueError(f"N={N} must be a multiple of block_n={block_n}")
+    if mode not in ("fixed_leak", "euler"):
+        raise ValueError(f"event dispatch supports fixed_leak|euler, got {mode!r}")
+    if counts.shape != (B,):
+        raise ValueError(f"counts must be shape ({B},), got {counts.shape}")
+    has_drive = drive is not None
+
+    grid = (B, N // block_n)
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    bspec = pl.BlockSpec((1, block_n), lambda b, j, i, c: (b, j))
+    pspec = pl.BlockSpec((1, block_n), lambda b, j, i, c: (0, j))
+
+    in_specs = [any_spec, bspec, bspec]
+    inputs = [w, v, r]
+    if has_drive:
+        in_specs.append(bspec)
+        inputs.append(drive)
+    row = lambda a: a.reshape(1, N)
+    in_specs += [pspec] * 6
+    inputs += [row(v_th), row(leak), row(r_ref), row(gain), row(i_bias),
+               row(v_reset)]
+
+    kernel = functools.partial(_event_db_kernel, mode=mode,
+                               has_drive=has_drive, block_n=block_n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[bspec, bspec, bspec],
+        scratch_shapes=[
+            pltpu.VMEM((1, block_n), jnp.float32),
+            pltpu.VMEM((2, 1, block_n), w.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N), v.dtype),
+            jax.ShapeDtypeStruct((B, N), r.dtype),
+            jax.ShapeDtypeStruct((B, N), v.dtype),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), counts.astype(jnp.int32), *inputs)

@@ -380,8 +380,15 @@ class EventFanIn:
 
 def default_k_active(n: int) -> int:
     """Default spike-slot budget for the top-k event path: n/8, floored at 8
-    (matches the bench cost model's ``2*rate*n`` at rate ~0.06)."""
-    return min(n, max(8, n // 8))
+    (matches the bench cost model's ``2*rate*n`` at rate ~0.06).
+
+    Thin alias over :func:`repro.core.dispatch_policy.resolve_k_active`
+    (with ``k_active=None``) -- the single source of the trigger that the
+    engine's telemetry mirror and the kernel bridge also use.
+    """
+    from repro.core.dispatch_policy import resolve_k_active
+
+    return resolve_k_active(n, None)
 
 
 def event_synaptic_input(
@@ -439,9 +446,9 @@ def event_synaptic_input(
         return jnp.einsum("...nc,nc->...n", gathered.astype(jnp.float32),
                           w_edges.astype(jnp.float32))
 
-    if k_active is None:
-        k_active = default_k_active(K)
-    k_active = min(k_active, K)
+    from repro.core.dispatch_policy import resolve_k_active
+
+    k_active = resolve_k_active(K, k_active)
 
     def dense(sv):
         return sv.astype(jnp.float32) @ wc.astype(jnp.float32)
@@ -504,38 +511,65 @@ def event_lif_step(
     overflow: str = "fallback",
     mode: str = "fixed_leak",
     surrogate: bool = False,
+    ext_diag: bool = False,
     use_kernel: Optional[bool] = None,
+    kernel: Optional[str] = None,
     interpret: Optional[bool] = None,
 ) -> LIFState:
     """State-level bridge for ``TickEngine(backend="event")``.
 
-    On TPU the top-k path lowers to the Pallas event-dispatch kernel
+    On TPU the top-k path lowers to a Pallas event-dispatch kernel
     (:mod:`repro.kernels.event_dispatch`): spike indices ride in as scalar
-    prefetch and only the spiking rows' fan-out slices ever leave HBM.  On
-    CPU (and for the fan-in gather / surrogate paths) the pure-jnp
-    reference above *is* the implementation -- XLA already executes the
-    gathers natively, so interpret-mode emulation would only add overhead.
+    prefetch and only the spiking rows' fan-out slices ever leave HBM.
+    ``kernel`` picks the variant -- ``"db"`` (default on TPU) is the
+    double-buffered compact-spike-list kernel that prefetches row k+1's
+    fan-out slice while accumulating row k and skips sentinel slots
+    entirely; ``"grid"`` is the BlockSpec-steered grid kernel.  On CPU
+    (and for the fan-in gather / surrogate paths) the pure-jnp reference
+    above *is* the implementation -- XLA already executes the gathers
+    natively, so interpret-mode emulation would only add overhead.
+
+    ``ext_diag=True`` computes the external drive as the elementwise
+    ``ext * diag(w_in)`` instead of the full ``ext @ w_in`` GEMM --
+    bit-identical when ``w_in`` is diagonal (the caller's contract;
+    :func:`repro.core.dispatch_policy.is_diagonal` checks it).
     """
     if use_kernel is None:
         use_kernel = _on_tpu() and fan_in is None and not surrogate
+
+    def _drive_of(e):
+        if e is None:
+            return None
+        if ext_diag:
+            return e * jnp.diagonal(params.w_in)
+        return e @ params.w_in
+
     if use_kernel:
         from repro.kernels import event_dispatch as _ev_kernel
 
         if surrogate:
             raise ValueError(
                 "event kernel path is inference-only; use the jnp path to train")
+        if kernel is None:
+            kernel = "db"
+        if kernel not in ("db", "grid"):
+            raise ValueError(f"kernel must be 'db' or 'grid', got {kernel!r}")
+        from repro.core.dispatch_policy import resolve_k_active
+
         batch_shape = lif_state.v.shape[:-1]
         n = lif_state.v.shape[-1]
         flat = lambda a: a.reshape((-1, a.shape[-1]))
         s = flat(spikes)
         B, K = s.shape
-        k = min(k_active or default_k_active(K), K)
-        drive = None
-        if ext is not None:
-            drive = flat(ext) @ params.w_in
+        k = resolve_k_active(K, k_active)
+        drive = _drive_of(None if ext is None else flat(ext))
         vals, idx = jax.lax.top_k(s, k)
         # Padded slots point at the sentinel zero row appended below.
         idx = jnp.where(vals > 0, idx, K).astype(jnp.int32)
+        # Per-row live-slot count: top_k packs the 1.0s first, so the
+        # first counts[b] slots are the real spiking rows (ascending) and
+        # the double-buffered kernel never touches the sentinel tail.
+        counts = jnp.sum(vals > 0, axis=-1).astype(jnp.int32)
         bn = _pick_block(n, _ev_kernel.DEFAULT_BLOCK_N, 128)
         pad_n = lambda a, v=0: _pad_to(a, a.ndim - 1, bn, value=v)
         wc_p = pad_n(jnp.concatenate(
@@ -547,13 +581,17 @@ def event_lif_step(
         lp = params.lif
 
         def event(_):
-            v_new, r_new, y = _ev_kernel.event_lif_dispatch(
+            dispatch = (_ev_kernel.event_lif_dispatch_db if kernel == "db"
+                        else _ev_kernel.event_lif_dispatch)
+            kw = dict(counts=counts) if kernel == "db" else {}
+            v_new, r_new, y = dispatch(
                 idx, wc_p, v_p, r_p, drive_p,
                 _pad_to(lp.v_th, 0, bn, value=big), _pad_to(lp.leak, 0, bn),
                 _pad_to(lp.r_ref, 0, bn), _pad_to(lp.gain, 0, bn),
                 _pad_to(lp.i_bias, 0, bn), _pad_to(lp.v_reset, 0, bn),
                 mode=mode, block_n=bn,
                 interpret=not _on_tpu() if interpret is None else interpret,
+                **kw,
             )
             return v_new[:, :n], r_new[:, :n], y[:, :n]
 
@@ -587,7 +625,7 @@ def event_lif_step(
     syn = event_synaptic_input(spikes, wc, k_active=k_active, fan_in=fan_in,
                                overflow=overflow)
     if ext is not None:
-        syn = syn + ext @ params.w_in
+        syn = syn + _drive_of(ext)
     return lif_step(lif_state, syn, params.lif, mode=mode, surrogate=surrogate)
 
 

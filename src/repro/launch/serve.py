@@ -190,6 +190,7 @@ class Tenant:
     backend: str = "jnp"
     fan_idx: Optional[jax.Array] = None   # (n_max, event_cap) i32
     fan_mask: Optional[jax.Array] = None  # (n_max, event_cap) f32
+    plan: Optional["object"] = None       # dispatch_policy.DispatchPlan
 
 
 @dataclasses.dataclass
@@ -310,6 +311,9 @@ class SNNServer:
         self._c_overflow = r.counter(
             "snn_event_overflow_ticks_total",
             "event-backend ticks that overflowed k_active to dense fallback")
+        self._c_policy = r.counter(
+            "snn_event_policy_dense_ticks_total",
+            "event-backend ticks the adaptive knee routed dense for speed")
         self._c_dw = r.counter(
             "snn_weight_delta_l1_total", "summed |dw| applied by plasticity")
         self._g_queue = r.gauge("snn_queue_depth", "requests awaiting a wave")
@@ -360,22 +364,31 @@ class SNNServer:
         padded = pad_tenant_params(params, self.n_max)
         plastic_c = padded.c if plastic else jnp.zeros_like(padded.c)
         density = float(np.asarray(params.c).sum()) / max(1, n * n)
-        backend, fan_idx, fan_mask = self.backend, None, None
+        backend, fan_idx, fan_mask, plan = self.backend, None, None, None
         if self.event_density is not None and density <= self.event_density:
-            from repro.core import connectivity
+            from repro.core import dispatch_policy
 
-            c_np = np.asarray(padded.c) > 0
-            if int(connectivity.fan_in(c_np).max()) <= self.event_cap:
+            # Admission-time dispatch plan (host side, concrete topology):
+            # vmap_safe because the wave vmaps the rollout over slots (the
+            # topk path's lax.cond would lower to a both-arms select);
+            # prefer_density is the operator contract -- at or below the
+            # server's threshold a fabric whose fan-in fits the shared cap
+            # rides the event program regardless of the modeled cost.
+            plan = dispatch_policy.plan(
+                np.asarray(padded.c) > 0, w_in=np.asarray(padded.w_in),
+                cap=self.event_cap, vmap_safe=True,
+                prefer_density=self.event_density)
+            if plan.strategy == "fan_in":
                 # Sparse tenant: ride the event program. Fan-in lists are
                 # built at the shared cap so every event slot stacks to
                 # one static shape (no retrace on tenant swap).
-                nbrs = connectivity.padded_fan_in(c_np, cap=self.event_cap)
                 backend = "event"
-                fan_idx = jnp.asarray(nbrs.idx, jnp.int32)
-                fan_mask = jnp.asarray(nbrs.mask, jnp.float32)
+                fan_idx = plan.neighbors.idx
+                fan_mask = plan.neighbors.mask
         t = Tenant(name=name, n=n, n_in=n_in, n_out=n_out, plastic=plastic,
                    params=padded, plastic_c=plastic_c, density=density,
-                   backend=backend, fan_idx=fan_idx, fan_mask=fan_mask)
+                   backend=backend, fan_idx=fan_idx, fan_mask=fan_mask,
+                   plan=plan)
         self.tenants[name] = t
         return t
 
@@ -478,6 +491,7 @@ class SNNServer:
             counts, w2, telem = out
             tel = jax.tree.map(np.asarray, telem)
             self._c_overflow.inc(float(tel.overflow.sum()))
+            self._c_policy.inc(float(tel.policy_dense.sum()))
             self._c_dw.inc(float(tel.dw_l1.sum()))
         else:
             counts, w2 = out
@@ -503,13 +517,15 @@ class SNNServer:
         """Fold slot ``i`` of a wave's telemetry into the tenant ledger."""
         o = self._tenant_obs.setdefault(t.name, {
             "requests": 0, "ticks": 0, "spikes": 0.0, "v_max": 0.0,
-            "ref_sum": 0.0, "overflow_ticks": 0, "dw_l1": 0.0})
+            "ref_sum": 0.0, "overflow_ticks": 0, "policy_dense_ticks": 0,
+            "dw_l1": 0.0})
         o["requests"] += 1
         o["ticks"] += int(tel.ticks[i])
         o["spikes"] += float(tel.spikes[i])
         o["v_max"] = max(o["v_max"], float(tel.v_max[i]))
         o["ref_sum"] += float(tel.ref_sum[i])
         o["overflow_ticks"] += int(tel.overflow[i])
+        o["policy_dense_ticks"] += int(tel.policy_dense[i])
         o["dw_l1"] += float(tel.dw_l1[i])
 
     def tenant_report(self) -> Dict[str, Dict]:
@@ -536,9 +552,11 @@ class SNNServer:
                 "refractory_occupancy": round(
                     o["ref_sum"] / max(1, ticks) * rescale, 4),
                 "overflow_ticks": o["overflow_ticks"],
+                "policy_dense_ticks": o["policy_dense_ticks"],
                 "dw_l1": round(o["dw_l1"], 3),
                 "plastic": t.plastic,
                 "backend": t.backend,
+                "dispatch": t.plan.strategy if t.plan is not None else None,
             }
         return rep
 

@@ -49,7 +49,12 @@ class TickTelemetry:
         (``mean_n 1{r > 0}``); divide by ``ticks`` for mean occupancy.
       overflow: event-backend overflow ticks -- ticks whose spike count
         exceeded ``k_active`` and took the dense fallback (always 0 for
-        dense backends and the event fan-in gather path).
+        dense backends and the event fan-in gather path).  These are
+        *correctness* fallbacks: without them spikes would be dropped.
+      policy_dense: event-backend *policy* ticks -- ticks the adaptive
+        knee routed to the dense arm purely for speed (spike count above
+        the knee but within ``k_active``; the event arm would have been
+        exact too).  Disjoint from ``overflow`` by construction.
       dw_l1: accumulated ``sum |dw|`` from the plasticity hook (0 when
         frozen) -- the L1 norm of the whole weight-update stream.
       dw_sq: accumulated ``sum dw^2``; ``sqrt`` of it is the L2 norm of
@@ -62,6 +67,7 @@ class TickTelemetry:
     v_max: jax.Array
     ref_sum: jax.Array
     overflow: jax.Array
+    policy_dense: jax.Array
     dw_l1: jax.Array
     dw_sq: jax.Array
 
@@ -69,9 +75,10 @@ class TickTelemetry:
     def zeros(batch_shape=()) -> "TickTelemetry":
         shape = tuple(batch_shape)
         f = lambda: jnp.zeros(shape, jnp.float32)
+        i = lambda: jnp.zeros(shape, jnp.int32)
         return TickTelemetry(
             ticks=jnp.zeros(shape, jnp.int32), spikes=f(), v_sum=f(),
-            v_max=f(), ref_sum=f(), overflow=jnp.zeros(shape, jnp.int32),
+            v_max=f(), ref_sum=f(), overflow=i(), policy_dense=i(),
             dw_l1=f(), dw_sq=f())
 
     def accumulate(
@@ -79,6 +86,7 @@ class TickTelemetry:
         lif_state,
         *,
         overflow_inc: Optional[jax.Array] = None,
+        policy_inc: Optional[jax.Array] = None,
         dw: Optional[jax.Array] = None,
     ) -> "TickTelemetry":
         """Fold one tick's outputs in (pure reductions over the neuron axis).
@@ -87,6 +95,9 @@ class TickTelemetry:
           lif_state: the post-tick :class:`~repro.core.lif.LIFState`.
           overflow_inc: optional batch-shaped i32 increment (event backend:
             1 on ticks that overflowed ``k_active`` into the dense fallback).
+          policy_inc: optional batch-shaped i32 increment (event backend:
+            1 on ticks the adaptive knee routed to the dense arm for speed
+            -- counted separately from ``overflow_inc``).
           dw: optional weight delta ``w_new - w_old`` from the plasticity
             hook (any shape; reduced to scalars and broadcast).
         """
@@ -112,6 +123,9 @@ class TickTelemetry:
         overflow = self.overflow
         if overflow_inc is not None:
             overflow = overflow + overflow_inc
+        policy_dense = self.policy_dense
+        if policy_inc is not None:
+            policy_dense = policy_dense + policy_inc
         return TickTelemetry(
             ticks=self.ticks + 1,
             spikes=self.spikes + s_y,
@@ -119,6 +133,7 @@ class TickTelemetry:
             v_max=jnp.maximum(self.v_max, m_v),
             ref_sum=self.ref_sum + s_r / n,
             overflow=overflow,
+            policy_dense=policy_dense,
             dw_l1=dw_l1,
             dw_sq=dw_sq)
 
@@ -147,6 +162,7 @@ class TickTelemetry:
             "refractory_occupancy":
                 float(leaf(self.ref_sum).mean()) / max(1.0, ticks),
             "overflow_ticks": float(leaf(self.overflow).sum()),
+            "policy_dense_ticks": float(leaf(self.policy_dense).sum()),
             "dw_l1": float(leaf(self.dw_l1).sum()),
             "dw_l2": float(np.sqrt(leaf(self.dw_sq).sum())),
         }

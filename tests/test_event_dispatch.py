@@ -102,6 +102,31 @@ class TestFanInGather:
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
 
+def _db_kernel_supported():
+    """Probe interpret-mode support for the double-buffered kernel's
+    make_async_copy/DMA-semaphore idiom (older jaxlibs can't emulate it
+    on CPU -- the TPU lowering is unaffected, so skipping is honest)."""
+    try:
+        n = 8
+        wc = jnp.ones((n, n))
+        lif0 = LIFState(v=jnp.zeros((1, n)), r=jnp.zeros((1, n), jnp.int32),
+                        y=jnp.zeros((1, n)))
+        params = SNNParams(w=wc, c=jnp.ones((n, n)),
+                           w_in=jnp.eye(n, dtype=jnp.float32),
+                           lif=LIFParams.make(n))
+        s = jnp.zeros((1, n)).at[0, 0].set(1.0)
+        ops.event_lif_step(lif0, s, params, None, wc, use_kernel=True,
+                           kernel="db", interpret=True)
+        return True
+    except Exception:
+        return False
+
+
+_DB_OK = _db_kernel_supported()
+needs_db = pytest.mark.skipif(
+    not _DB_OK, reason="interpret-mode async-copy unsupported by this jaxlib")
+
+
 def _case(b, n, *, density=0.3, seed=None):
     rng = np.random.default_rng(n + b if seed is None else seed)
     c = connectivity.sparse_random(n, density, seed=n)
@@ -166,3 +191,105 @@ class TestEventKernel:
             ops.event_lif_step(lif0, jnp.zeros((b, n)), params, None, wc,
                                surrogate=True, use_kernel=True,
                                interpret=True)
+
+    def test_unknown_kernel_variant_rejected(self):
+        b, n = 2, 16
+        _, params, wc, lif0 = _case(b, n)
+        with pytest.raises(ValueError, match="'db' or 'grid'"):
+            ops.event_lif_step(lif0, jnp.zeros((b, n)), params, None, wc,
+                               use_kernel=True, kernel="typo",
+                               interpret=True)
+
+
+@needs_db
+class TestDoubleBufferedKernel:
+    """The compact-spike-list kernel ("db"): per-row counts bound the DMA
+    loop, a two-slot VMEM buffer overlaps row k+1's copy with row k's
+    accumulate -- and none of that may change a single bit vs the grid
+    kernel or the jnp reference."""
+
+    @pytest.mark.parametrize("mode", ["fixed_leak", "euler"])
+    @pytest.mark.parametrize("b,n,with_ext", [(4, 74, True), (3, 139, False),
+                                              (8, 256, True)])
+    def test_db_matches_jnp_path(self, mode, b, n, with_ext):
+        rng, params, wc, lif0 = _case(b, n)
+        s = jnp.asarray((rng.random((b, n)) < 0.1).astype(np.float32))
+        ext = jnp.asarray((rng.random((b, n)) < 0.2).astype(np.float32)) \
+            if with_ext else None
+        want = jax.jit(lambda l, sp, e: ops.event_lif_step(
+            l, sp, params, e, wc, mode=mode, use_kernel=False))(lif0, s, ext)
+        got = jax.jit(lambda l, sp, e: ops.event_lif_step(
+            l, sp, params, e, wc, mode=mode, use_kernel=True, kernel="db",
+            interpret=True))(lif0, s, ext)
+        for name in ("v", "r", "y"):
+            np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                          np.asarray(getattr(want, name)),
+                                          err_msg=name)
+
+    def test_db_matches_grid_kernel(self):
+        """Same spike list, two steering mechanisms (counts-bounded DMA
+        loop vs sentinel-masked grid): bit-identical outputs."""
+        b, n = 5, 96
+        rng, params, wc, lif0 = _case(b, n)
+        s = jnp.asarray((rng.random((b, n)) < 0.15).astype(np.float32))
+        ext = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+        outs = {}
+        for kname in ("db", "grid"):
+            outs[kname] = jax.jit(lambda l, sp, e, _k=kname: ops.event_lif_step(
+                l, sp, params, e, wc, use_kernel=True, kernel=_k,
+                interpret=True))(lif0, s, ext)
+        for name in ("v", "r", "y"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(outs["db"], name)),
+                np.asarray(getattr(outs["grid"], name)), err_msg=name)
+
+    def test_db_zero_spike_rows(self):
+        """Rows with count==0 must skip the DMA loop entirely and still
+        run the LIF epilogue (leak/refractory continue on silent input)."""
+        b, n = 4, 64
+        rng, params, wc, lif0 = _case(b, n)
+        s = np.zeros((b, n), np.float32)
+        s[1, 3] = 1.0                        # rows 0, 2, 3 fully silent
+        got = ops.event_lif_step(lif0, jnp.asarray(s), params, None, wc,
+                                 use_kernel=True, kernel="db", interpret=True)
+        want = ops.event_lif_step(lif0, jnp.asarray(s), params, None, wc,
+                                  use_kernel=False)
+        for name in ("v", "r", "y"):
+            np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                          np.asarray(getattr(want, name)),
+                                          err_msg=name)
+
+    def test_db_ragged_counts(self):
+        """Every row a different live count (0..k_active), sentinel tail
+        untouched: the per-row bound is data, not shape."""
+        b, n, k = 6, 80, 8
+        rng, params, wc, lif0 = _case(b, n, seed=3)
+        s = np.zeros((b, n), np.float32)
+        for row in range(b):
+            cols = rng.choice(n, size=row, replace=False)
+            s[row, cols] = 1.0               # row r spikes exactly r rows
+        got = ops.event_lif_step(lif0, jnp.asarray(s), params, None, wc,
+                                 k_active=k, use_kernel=True, kernel="db",
+                                 interpret=True)
+        want = ops.event_lif_step(lif0, jnp.asarray(s), params, None, wc,
+                                  k_active=k, use_kernel=False)
+        for name in ("v", "r", "y"):
+            np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                          np.asarray(getattr(want, name)),
+                                          err_msg=name)
+
+    def test_db_overflow_falls_back_dense(self):
+        b, n = 3, 64
+        _, params, wc, _ = _case(b, n, density=0.5)
+        lif0 = LIFState(v=jnp.zeros((b, n)), r=jnp.zeros((b, n), jnp.int32),
+                        y=jnp.zeros((b, n)))
+        s = jnp.ones((b, n))
+        got = ops.event_lif_step(lif0, s, params, None, wc, k_active=4,
+                                 use_kernel=True, kernel="db", interpret=True)
+        want = fused_lif_step_ref(
+            s, params.w, params.c, lif0.v, lif0.r, None,
+            params.lif.v_th, params.lif.leak, params.lif.r_ref,
+            params.lif.gain, params.lif.i_bias, params.lif.v_reset)
+        np.testing.assert_allclose(np.asarray(got.v), np.asarray(want.v),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got.y), np.asarray(want.y))
