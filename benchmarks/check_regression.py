@@ -14,6 +14,11 @@ checked key-by-key:
   which is a *policy floor* (e.g. telemetry-on must keep >= 0.9x the
   telemetry-off ticks/s -- the <10% overhead budget); ``--refresh``
   preserves the committed floor instead of snapshotting the run;
+* latency keys (``*_ttft_s``) are *ceilings*: the current value must
+  not exceed the baseline by more than ``--tolerance`` (serving p99
+  TTFT is a contract, not a nice-to-have; ``--refresh`` snapshots
+  ``value / headroom`` so the committed ceiling sits well above run
+  noise);
 * win-ratio keys (``*_win_vs_*``) are policy floors the same way: the
   event backend's ticks/s advantage over each dense backend at every
   sparse grid point.  The committed floors (>= 1.0 against jnp) ARE
@@ -68,6 +73,11 @@ def _is_ratio_key(k: str) -> bool:
     return k.endswith("_on_off_ratio") or "_win_vs_" in k
 
 
+def _is_latency_key(k: str) -> bool:
+    """Latency keys: gated as ceilings (lower is better)."""
+    return k.endswith("_ttft_s")
+
+
 def check_one(
     name: str, baseline: Dict, current: Dict, tolerance: float,
 ) -> List[str]:
@@ -98,6 +108,13 @@ def check_one(
                 failures.append(
                     f"{name}: {k} fell below the policy floor "
                     f"{base} -> {cur}")
+        elif _is_latency_key(k):
+            ceiling = float(base) * (1.0 + tolerance)
+            if float(cur) > ceiling:
+                failures.append(
+                    f"{name}: {k} rose {base} -> {cur} "
+                    f"(>{tolerance:.0%} above baseline, ceiling "
+                    f"{ceiling:.4f})")
     return failures
 
 
@@ -113,6 +130,10 @@ def _delta_table(baseline: Dict, current: Dict) -> List[str]:
             rows.append(f"    {k}: {base} -> {cur} ({slack:+.0%} vs floor)")
         elif _is_compile_key(k):
             rows.append(f"    {k}: {base} -> {cur} (ceiling {base})")
+        elif _is_latency_key(k):
+            slack = (float(base) - float(cur)) / max(1e-9, abs(float(base)))
+            rows.append(
+                f"    {k}: {base} -> {cur} ({slack:+.0%} under ceiling)")
         elif _is_exact_key(k):
             rows.append(f"    {k}: {base} -> {cur}")
     return rows
@@ -157,7 +178,7 @@ def refresh(current_dir: str) -> None:
             k for k in current
             if not k.startswith("_")
             and (_is_rate_key(k) or _is_compile_key(k) or _is_exact_key(k)
-                 or _is_ratio_key(k))}
+                 or _is_ratio_key(k) or _is_latency_key(k))}
         gated_base = {k for k in baseline if not k.startswith("_")}
         for k in sorted(gated_base - set(current)):
             errors.append(
@@ -176,6 +197,11 @@ def refresh(current_dir: str) -> None:
                               f"(above old floor {baseline.get(k, 0)})")
             if _is_rate_key(k):
                 v = round(float(v) * REFRESH_HEADROOM, 1)
+            if _is_latency_key(k):
+                # Ceilings get the inverse headroom: the committed bound
+                # sits ~3x above the observed latency, so the 25% gate
+                # only trips on a real p99 blow-up, not runner jitter.
+                v = round(float(v) / REFRESH_HEADROOM, 4)
             if _is_ratio_key(k):
                 # Policy floors, not snapshots: refresh keeps the committed
                 # floor; a brand-new ratio key starts 10% under its run

@@ -33,7 +33,7 @@ import numpy as np
 from repro.configs import get_bundle
 from repro.configs.mnist_stdp import RUN, N_CLASSES, N_HIDDEN, N_INPUT
 from repro.core import connectivity
-from repro.core.engine import TickEngine
+from repro.core.engine import EngineOptions, TickEngine
 from repro.core.lif import LIFParams
 from repro.core.network import SNNParams, SNNState, params_from_registers
 from repro.core.registers import RegisterBank, WeightLayout
@@ -47,8 +47,8 @@ jax.config.update("jax_platform_name", "cpu")
 # static plasticity configs (the hardware analogue: one fabric, two
 # learning-engine register settings).
 INFER = TickEngine()
-FEATURE = TickEngine(plasticity=RUN.feature)
-READOUT = TickEngine(plasticity=RUN.readout)
+FEATURE = TickEngine(EngineOptions(plasticity=RUN.feature))
+READOUT = TickEngine(EngineOptions(plasticity=RUN.readout))
 
 
 # ---------------------------------------------------------------------------

@@ -61,7 +61,7 @@ def main(argv=None):
     w_plastic0 = np.asarray(server.tenants[plastic[0]].params.w).copy()
     stats = server.serve(reqs)
     for k, v in stats.items():
-        if k != "preds":
+        if k not in ("preds", "results"):
             print(f"  {k}: {v}")
 
     assert stats["compiles"] == 1, "tenant swaps must not recompile"
@@ -83,6 +83,18 @@ def main(argv=None):
               f"dw_l1={row['dw_l1']:.1f}"
               f"{'  [plastic]' if row['plastic'] else ''}")
     assert server.tenant_report()[plastic[0]]["dw_l1"] > 0
+
+    # Continuous admission: same tenants, same compiled program, but slots
+    # retire and refill individually instead of draining whole waves -- so
+    # short requests stop waiting on the longest one in their wave.
+    cont = server.serve_continuous(
+        make_demo_requests(server, names, n_requests, seed=2))
+    assert cont["recompiles_after_warmup"] == 0, \
+        "slot refill must reuse the wave path's compiled chunk program"
+    print(f"continuous admission: served {cont['requests_served']} more "
+          f"requests, mean TTFT {cont['mean_ttft_s'] * 1e3:.1f} ms, "
+          f"p99 {cont['p99_ttft_s'] * 1e3:.1f} ms, 0 recompiles")
+
     print("PASS - one compiled tick program served "
           f"{stats['n_tenants']} networks / {stats['n_requests']} requests")
     return stats

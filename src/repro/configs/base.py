@@ -59,6 +59,9 @@ class ModelConfig:
     snn_dispatch: str = "auto"       # event-backend strategy: auto | fan_in | topk | dense
     snn_density: float = 0.5         # topology density for free-form fabrics
     snn_rate: float = 0.1            # target input spike rate (event operating point)
+    snn_chunk_ticks: int = 8         # continuous-admission chunk size (ticks
+                                     # per scheduler round; smaller = lower
+                                     # TTFT, larger = fewer host/device syncs)
     # numerics
     dtype: str = "bfloat16"
     # provenance

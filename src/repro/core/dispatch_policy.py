@@ -180,6 +180,17 @@ class DispatchPlan:
             event_ext_diag=self.ext_diag,
         )
 
+    def engine_options(self, **overrides):
+        """This plan as a validated
+        :class:`~repro.core.engine.EngineOptions` (the preferred engine
+        construction); ``overrides`` layer non-event statics on top,
+        e.g. ``plan.engine_options(mode="euler", telemetry=True)``."""
+        from repro.core.engine import EngineOptions
+
+        kw = self.engine_kwargs()
+        kw.update(overrides)
+        return EngineOptions(**kw)
+
 
 def is_diagonal(w_in: Optional[np.ndarray]) -> bool:
     """True when the input matrix routes each input only to its own

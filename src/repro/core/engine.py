@@ -52,6 +52,7 @@ the same pin.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Optional, Tuple
 
 import jax
@@ -59,6 +60,11 @@ import jax.numpy as jnp
 
 from repro.core.lif import lif_step
 from repro.core.network_types import SNNParams, SNNState  # noqa: F401 (re-export surface)
+
+_BACKENDS = ("jnp", "pallas", "pallas_fused", "event")
+_MODES = ("fixed_leak", "euler", "int")
+_OVERFLOW = ("fallback", "strict", "unchecked")
+_DISPATCH = ("auto", "fan_in", "topk", "dense")
 
 
 @jax.tree_util.register_dataclass
@@ -90,9 +96,25 @@ class TickCarry:
 
 
 @dataclasses.dataclass(frozen=True)
-class TickEngine:
-    """Static tick configuration (a hashable non-pytree: jit-safe to
-    close over, like the LIF ``mode`` string it generalizes).
+class EngineOptions:
+    """ALL of the engine's static (trace-time) configuration, in one
+    frozen, *validated* dataclass.
+
+    This is the one home for what used to be :class:`TickEngine`'s
+    sprawl of per-call statics (``backend``, ``telemetry``,
+    ``event_k_active``, ``event_overflow``, ``event_dispatch``,
+    ``event_knee``, ``event_hysteresis``, ``event_ext_diag``, ...).
+    Invalid values and invalid *combinations* (e.g. ``event_knee``
+    without ``event_overflow="fallback"``) fail here, at construction,
+    with a clear message -- not deep inside the scan.
+
+    Hashable non-pytree, like the LIF ``mode`` string it generalizes:
+    jit-safe to close over, cheap to ``dataclasses.replace``. Build one
+    and pass it to :class:`TickEngine`,
+    :func:`repro.core.network.rollout` /
+    :func:`~repro.core.network.learning_rollout`, or
+    :class:`repro.launch.serve.SNNServer` -- the per-call static kwargs
+    those accept remain as a deprecation shim for one release.
 
     Attributes:
       mode: LIF formulation ("fixed_leak" | "euler" | "int").
@@ -154,6 +176,48 @@ class TickEngine:
     event_ext_diag: bool = False
     telemetry: bool = False
 
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        """Fail fast on invalid values or combinations (construction-time)."""
+        if self.backend not in _BACKENDS:
+            raise ValueError(
+                f"backend must be one of {_BACKENDS}, got {self.backend!r}")
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"mode must be one of {_MODES}, got {self.mode!r}")
+        if self.plasticity_backend not in (None,) + _BACKENDS:
+            raise ValueError(
+                f"plasticity_backend must be None or one of {_BACKENDS}, "
+                f"got {self.plasticity_backend!r}")
+        if self.event_overflow not in _OVERFLOW:
+            raise ValueError(
+                f"event_overflow must be one of {_OVERFLOW}, "
+                f"got {self.event_overflow!r}")
+        if self.event_dispatch not in _DISPATCH:
+            raise ValueError(
+                f"event_dispatch must be one of {_DISPATCH}, "
+                f"got {self.event_dispatch!r}")
+        if self.event_k_active is not None and int(self.event_k_active) < 1:
+            raise ValueError(
+                f"event_k_active must be >= 1 (or None for the n//8 "
+                f"default), got {self.event_k_active}")
+        if self.event_knee is not None:
+            if int(self.event_knee) < 1:
+                raise ValueError(
+                    f"event_knee must be >= 1 ticks' spikes (or None to "
+                    f"disable the adaptive knee), got {self.event_knee}")
+            if self.event_overflow != "fallback":
+                raise ValueError(
+                    "event_knee requires event_overflow='fallback' (the "
+                    "knee routes overflow ticks to the dense arm silently, "
+                    "which contradicts strict/unchecked semantics)")
+        if not (0.0 < float(self.event_hysteresis) <= 1.0):
+            raise ValueError(
+                "event_hysteresis is a release *fraction* of the knee and "
+                f"must lie in (0, 1], got {self.event_hysteresis}")
+
     def _event_strategy(self, neighbors: Optional[Any]) -> str:
         """Resolve ``event_dispatch`` against what the call provided."""
         strategy = self.event_dispatch
@@ -169,6 +233,63 @@ class TickEngine:
                 "neighbors=EventFanIn.from_dense(wc, c) (or let "
                 "dispatch_policy.plan build them)")
         return strategy
+
+
+class TickEngine(EngineOptions):
+    """The resident tick datapath, configured by :class:`EngineOptions`.
+
+    Preferred construction::
+
+        eng = TickEngine(EngineOptions(backend="event", telemetry=True))
+
+    The old per-call static kwargs (``TickEngine(backend=..., mode=...,
+    event_k_active=..., ...)``) remain accepted as a deprecation shim for
+    one release; they emit a :class:`DeprecationWarning` and keep the old
+    *lazy* validation semantics (invalid combinations fail where they
+    always did, inside the scan) so existing callers see no behavior
+    change. New code should build an :class:`EngineOptions`, which
+    validates eagerly at construction.
+
+    Hashable, frozen, and field-compatible with :class:`EngineOptions`
+    (it *is* one), so it stays jit-safe to close over.
+    """
+
+    def __init__(self, options: Optional[EngineOptions] = None, **legacy):
+        if options is not None:
+            if legacy:
+                raise TypeError(
+                    "pass ONE of EngineOptions or legacy static kwargs, "
+                    f"not both (got options= and {sorted(legacy)})")
+            if not isinstance(options, EngineOptions):
+                raise TypeError(
+                    f"options must be an EngineOptions, got {type(options)}")
+            EngineOptions.__init__(
+                self, **{f.name: getattr(options, f.name)
+                         for f in dataclasses.fields(EngineOptions)})
+            return
+        names = {f.name for f in dataclasses.fields(EngineOptions)}
+        unknown = set(legacy) - names
+        if unknown:
+            raise TypeError(
+                f"unknown engine option(s) {sorted(unknown)}; valid names: "
+                f"{sorted(names)}")
+        if legacy:
+            warnings.warn(
+                "TickEngine(**per-call statics) is deprecated; build a "
+                "validated EngineOptions and pass TickEngine(options) "
+                "(the kwargs shim remains for one release)",
+                DeprecationWarning, stacklevel=2)
+        # Legacy shim: set fields WITHOUT the eager cross-field validation
+        # (old callers relied on e.g. the event_knee/event_overflow clash
+        # raising inside rollout, not at construction).
+        for f in dataclasses.fields(EngineOptions):
+            object.__setattr__(self, f.name, legacy.get(f.name, f.default))
+
+    @property
+    def options(self) -> EngineOptions:
+        """This engine's configuration as a plain :class:`EngineOptions`."""
+        return EngineOptions(**{f.name: getattr(self, f.name)
+                                for f in dataclasses.fields(EngineOptions)})
 
     # -- the single tick body ---------------------------------------------
 
@@ -589,3 +710,52 @@ class TickEngine:
         if self.telemetry:
             return (final.state, final.plast, final.w), raster, final.telem
         return (final.state, final.plast, final.w), raster
+
+    def init_learning_carry(
+        self,
+        params: SNNParams,
+        state: SNNState,
+        plast_state: Any,
+    ) -> TickCarry:
+        """Build the chunk-resumable carry for a fresh learning request.
+
+        Pairs with :meth:`chunk` -- the continuous-serving path builds
+        one of these when a slot is (re)filled, then hands it across
+        chunk boundaries instead of re-entering :meth:`learning_rollout`
+        from scratch every wave."""
+        return TickCarry(state=state, plast=plast_state, w=params.w)
+
+    def chunk(
+        self,
+        params: SNNParams,
+        carry: TickCarry,
+        ext_seq: Optional[jax.Array],
+        n_ticks: int,
+        *,
+        rewards: Optional[jax.Array] = None,
+        plastic_c: Optional[jax.Array] = None,
+        learn_until: Optional[jax.Array] = None,
+        neighbors: Optional[Any] = None,
+    ) -> Tuple[TickCarry, jax.Array]:
+        """Run ``n_ticks`` more ticks from an *existing* carry; returns
+        ``(next_carry, raster)``.
+
+        This is the continuous-admission hand-off: a serving loop that
+        admits per slot (not per wave) runs the fabric in small chunks
+        and threads the full :class:`TickCarry` -- state, plasticity
+        traces, mutable weights, telemetry, hysteresis bit -- across
+        chunk boundaries, so ``K`` chunks of ``T`` ticks are bit-exact
+        with one ``K*T``-tick rollout (pinned in
+        tests/test_engine_options.py). ``n_ticks`` stays static per
+        chunk size, so one compiled chunk program serves every request
+        length; the carry is the only thing that moves.
+
+        ``rewards`` defaults to zeros on learning carries (``carry.w``
+        present) -- mid-stream R-STDP feedback passes real rewards."""
+        if rewards is None and carry.w is not None:
+            rewards = jnp.zeros((n_ticks,), jnp.float32)
+        if plastic_c is None and carry.w is not None:
+            plastic_c = params.c
+        return self.scan(params, carry, ext_seq, n_ticks,
+                         rewards=rewards, plastic_c=plastic_c,
+                         learn_until=learn_until, neighbors=neighbors)

@@ -25,13 +25,16 @@ the TPU restatement of the paper's mux fabric (DESIGN.md §4).
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import TickCarry, TickEngine  # noqa: F401 (public API)
+from repro.core.engine import (  # noqa: F401 (public API)
+    EngineOptions, TickCarry, TickEngine,
+)
 from repro.core.lif import LIFParams
 from repro.core.network_types import (  # noqa: F401 (back-compat re-exports)
     SNNParams, SNNState, synaptic_input,
@@ -65,6 +68,42 @@ def _resolve_dispatch(dispatch, params, state, neighbors):
     return plan.engine_kwargs(), neighbors
 
 
+def _build_engine(options, kw, dispatch, params, state, neighbors):
+    """One engine-construction point for every wrapper below.
+
+    ``options`` (an :class:`EngineOptions`) wins over the legacy per-call
+    kwargs in ``kw``; a ``dispatch`` policy overlays its event statics on
+    either. Always returns a *validated* engine (the wrappers never take
+    the deprecated ``TickEngine(**kw)`` path)."""
+    if dispatch is not None:
+        dkw, neighbors = _resolve_dispatch(dispatch, params, state, neighbors)
+    else:
+        dkw = {}
+    if options is not None:
+        if not isinstance(options, EngineOptions):
+            raise TypeError(
+                f"options must be an EngineOptions, got {type(options)}")
+        if dkw:
+            opts = _replace_options(options, **dkw)
+        else:
+            opts = options
+    else:
+        kw = dict(kw)
+        kw.update(dkw)
+        opts = EngineOptions(**kw)
+    return TickEngine(opts), neighbors
+
+
+def _replace_options(options: EngineOptions, **changes) -> EngineOptions:
+    """``dataclasses.replace`` that always lands on a plain (validated)
+    EngineOptions -- safe even when handed a TickEngine subclass, whose
+    ``replace`` would route through the deprecated kwargs shim."""
+    merged = {f.name: getattr(options, f.name)
+              for f in dataclasses.fields(EngineOptions)}
+    merged.update(changes)
+    return EngineOptions(**merged)
+
+
 def step(
     state: SNNState,
     params: SNNParams,
@@ -76,6 +115,7 @@ def step(
     backend: str = "jnp",
     neighbors=None,
     dispatch=None,
+    options: Optional[EngineOptions] = None,
 ) -> SNNState:
     """One synchronous network tick.
 
@@ -98,12 +138,13 @@ def step(
         :func:`repro.core.dispatch_policy.plan`; implies the event
         backend), a :class:`~repro.core.dispatch_policy.DispatchPlan`,
         or a literal strategy string ("fan_in"|"topk"|"dense").
+      options: a prebuilt :class:`~repro.core.engine.EngineOptions`; when
+        given it supersedes the per-call static kwargs (``mode`` /
+        ``surrogate`` / ``backend``) entirely.
     """
-    kw = dict(mode=mode, surrogate=surrogate, backend=backend)
-    if dispatch is not None:
-        dkw, neighbors = _resolve_dispatch(dispatch, params, state, neighbors)
-        kw.update(dkw)
-    eng = TickEngine(**kw)
+    eng, neighbors = _build_engine(
+        options, dict(mode=mode, surrogate=surrogate, backend=backend),
+        dispatch, params, state, neighbors)
     return eng.tick(state, params, ext, delays=delays, neighbors=neighbors)
 
 
@@ -120,6 +161,7 @@ def rollout(
     neighbors=None,
     telemetry: bool = False,
     dispatch=None,
+    options: Optional[EngineOptions] = None,
 ):
     """Scan ``n_ticks`` network ticks; returns final state + spike raster.
 
@@ -131,13 +173,14 @@ def rollout(
     :class:`repro.obs.telemetry.TickTelemetry` to the return tuple:
     ``(final_state, raster, telemetry)``; off by default and bit-free
     when off (tests/test_obs.py pins the HLO identity).
+    ``options``: a prebuilt :class:`~repro.core.engine.EngineOptions`
+    superseding the per-call static kwargs.
     """
-    kw = dict(mode=mode, surrogate=surrogate, backend=backend,
-              telemetry=telemetry)
-    if dispatch is not None:
-        dkw, neighbors = _resolve_dispatch(dispatch, params, state, neighbors)
-        kw.update(dkw)
-    eng = TickEngine(**kw)
+    eng, neighbors = _build_engine(
+        options,
+        dict(mode=mode, surrogate=surrogate, backend=backend,
+             telemetry=telemetry),
+        dispatch, params, state, neighbors)
     return eng.rollout(params, state, ext_seq, n_ticks, delays=delays,
                        neighbors=neighbors)
 
@@ -149,7 +192,7 @@ def learning_rollout(
     ext_seq: Optional[jax.Array],
     n_ticks: int,
     *,
-    plasticity,  # repro.plasticity.stdp.PlasticityParams
+    plasticity=None,  # repro.plasticity.stdp.PlasticityParams (or in options)
     rewards: Optional[jax.Array] = None,
     plastic_c: Optional[jax.Array] = None,
     mode: str = "fixed_leak",
@@ -158,6 +201,7 @@ def learning_rollout(
     neighbors=None,
     telemetry: bool = False,
     dispatch=None,
+    options: Optional[EngineOptions] = None,
 ):
     """Scan ``n_ticks`` *learning* ticks: the carry holds mutable weights.
 
@@ -195,13 +239,20 @@ def learning_rollout(
     Returns:
       ``((final_state, final_plast_state, final_w), raster)``, plus a
       trailing ``telemetry`` element when ``telemetry=True``.
+
+    ``options``: a prebuilt :class:`~repro.core.engine.EngineOptions`
+    superseding the per-call static kwargs (it must then carry the
+    ``plasticity`` params itself, or the explicit ``plasticity`` arg is
+    overlaid onto it).
     """
-    kw = dict(mode=mode, backend=backend, plasticity=plasticity,
-              plasticity_backend=plasticity_backend, telemetry=telemetry)
-    if dispatch is not None:
-        dkw, neighbors = _resolve_dispatch(dispatch, params, state, neighbors)
-        kw.update(dkw)
-    eng = TickEngine(**kw)
+    if options is not None and options.plasticity is None and plasticity is not None:
+        options = _replace_options(options, plasticity=plasticity,
+                                   plasticity_backend=plasticity_backend)
+    eng, neighbors = _build_engine(
+        options,
+        dict(mode=mode, backend=backend, plasticity=plasticity,
+             plasticity_backend=plasticity_backend, telemetry=telemetry),
+        dispatch, params, state, neighbors)
     return eng.learning_rollout(params, state, plast_state, ext_seq, n_ticks,
                                 rewards=rewards, plastic_c=plastic_c,
                                 neighbors=neighbors)
@@ -268,7 +319,8 @@ def forward_layered(
         )
         batch_shape = spikes_in.shape[:-1]
     state = SNNState.zeros(batch_shape, n, dtype=params.w.dtype)
-    eng = TickEngine(mode=mode, surrogate=surrogate, backend=backend)
+    eng = TickEngine(EngineOptions(mode=mode, surrogate=surrogate,
+                                   backend=backend))
     final, raster = eng.rollout(params, state, ext_seq, n_ticks)
     n_out = layer_sizes[-1]
     return raster[..., n - n_out :], final

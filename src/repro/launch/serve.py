@@ -30,26 +30,121 @@ import argparse
 import dataclasses
 import functools
 import time
-from typing import Dict, List, Optional
+import warnings
+from collections import deque
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_bundle
+from repro.core.engine import EngineOptions
 from repro.models import model as M
 from repro.obs import MetricsRegistry, log_event, profile, span
 
 
 @dataclasses.dataclass
-class Request:
+class ServeRequest:
+    """ONE request type for both servers (the unified serve surface).
+
+    The LM :class:`WaveServer` reads ``prompt``/``max_new``; the
+    :class:`SNNServer` reads ``ext``/``n_ticks``/``rewards``. ``t_submit``
+    is the *enqueue* time: callers that queue requests (the async
+    front-end) stamp it at admission so TTFT includes queue wait; the
+    servers only stamp it (lazily, when still ``0.0``) for requests
+    handed to them directly.
+
+    Result fields (``out``/``counts``/``pred``/timestamps) are filled in
+    place as the request completes -- :meth:`ServeResult.of` snapshots
+    them into the immutable result record the stats dicts carry.
+    """
+
     rid: int
-    prompt: np.ndarray          # (S,) or (S, K) int32
-    max_new: int
+    # -- LM fields
+    prompt: Optional[np.ndarray] = None   # (S,) or (S, K) int32
+    max_new: int = 0
+    # -- SNN fields
+    tenant: str = ""
+    ext: Optional[np.ndarray] = None      # (T_req, n_in) input spike train
+    n_ticks: int = 0                      # tick budget for this request
+    rewards: Optional[np.ndarray] = None  # (T_req,) dopamine (R-STDP)
+    # -- result fields (filled by the servers)
     out: List = dataclasses.field(default_factory=list)
+    counts: Optional[np.ndarray] = None   # (n_out,) rate-decoded counts
+    pred: Optional[int] = None            # argmax over output neurons
     t_submit: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """Immutable completion record, one per served request.
+
+    ``ttft_s`` is measured from *enqueue* (``t_submit``), not from
+    wave/chunk start -- under continuous admission a queued request's
+    wait is real latency its caller observed.
+    """
+
+    rid: int
+    tenant: str = ""
+    out: tuple = ()                       # LM: generated token ids
+    counts: Optional[np.ndarray] = None   # SNN: rate-decoded counts
+    pred: Optional[int] = None
+    rejected: bool = False
+    reason: str = ""                      # admission-rejection reason
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> float:
+        if self.t_first is None:
+            return 0.0
+        return max(0.0, self.t_first - self.t_submit)
+
+    @classmethod
+    def of(cls, r: "ServeRequest") -> "ServeResult":
+        return cls(rid=r.rid, tenant=r.tenant, out=tuple(r.out),
+                   counts=r.counts, pred=r.pred, t_submit=r.t_submit,
+                   t_first=r.t_first, t_done=r.t_done)
+
+    @classmethod
+    def rejection(cls, r: "ServeRequest", reason: str) -> "ServeResult":
+        now = time.time()
+        return cls(rid=r.rid, tenant=r.tenant, rejected=True, reason=reason,
+                   t_submit=r.t_submit or now, t_first=None, t_done=now)
+
+
+class Request(ServeRequest):
+    """Deprecated LM request shim -- use :class:`ServeRequest`."""
+
+    def __init__(self, rid, prompt=None, max_new=0, out=None,
+                 t_submit=0.0, t_first=None, t_done=None):
+        warnings.warn(
+            "launch.serve.Request is deprecated; use ServeRequest "
+            "(same fields, shared with SNNServer)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(rid=rid, prompt=prompt, max_new=max_new,
+                         t_submit=t_submit, t_first=t_first, t_done=t_done)
+        if out is not None:
+            self.out = out
+
+
+class SNNRequest(ServeRequest):
+    """Deprecated SNN request shim -- use :class:`ServeRequest`."""
+
+    def __init__(self, rid, tenant="", ext=None, n_ticks=0, rewards=None,
+                 counts=None, pred=None, t_submit=0.0, t_first=None,
+                 t_done=None):
+        warnings.warn(
+            "launch.serve.SNNRequest is deprecated; use ServeRequest "
+            "(same fields, shared with the LM WaveServer)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(rid=rid, tenant=tenant, ext=ext, n_ticks=n_ticks,
+                         rewards=rewards, counts=counts, pred=pred,
+                         t_submit=t_submit, t_first=t_first, t_done=t_done)
 
 
 class WaveServer:
@@ -63,7 +158,7 @@ class WaveServer:
         self._decode = jax.jit(lambda p, b, c: M.decode_fn(p, cfg, b, c))
         self._prefill = jax.jit(lambda p, b, c: M.prefill_fn(p, cfg, b, c))
 
-    def _pad_prompts(self, reqs: List[Request]) -> np.ndarray:
+    def _pad_prompts(self, reqs: List[ServeRequest]) -> np.ndarray:
         plen = max(len(r.prompt) for r in reqs)
         shape = (self.slots, plen) + (
             (self.cfg.n_codebooks,) if self.cfg.family == "audio" else ())
@@ -72,7 +167,7 @@ class WaveServer:
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad with 0
         return toks
 
-    def run_wave(self, reqs: List[Request]) -> int:
+    def run_wave(self, reqs: List[ServeRequest]) -> int:
         """Prefill + decode one wave to completion; returns decode steps."""
         cfg = self.cfg
         toks = self._pad_prompts(reqs)
@@ -116,17 +211,22 @@ class WaveServer:
         return steps
 
 
-def serve(cfg, params, requests: List[Request], *, slots: int = 4,
+def serve(cfg, params, requests: List[ServeRequest], *, slots: int = 4,
           max_len: int = 64) -> Dict:
     if not requests:
         # Empty queue: a well-formed zero report, never np.mean([]).
         return {"n_requests": 0, "requests_served": 0, "decode_steps": 0,
                 "new_tokens": 0, "wall_s": 0.0, "tokens_per_s": 0.0,
-                "mean_ttft_s": 0.0, "outputs": {}}
+                "mean_ttft_s": 0.0, "p99_ttft_s": 0.0, "outputs": {},
+                "results": []}
     server = WaveServer(cfg, params, slots=slots, max_len=max_len)
+    now = time.time()
     for r in requests:
-        r.t_submit = time.time()
-    done: List[Request] = []
+        # TTFT counts from *enqueue*: keep a caller-stamped submit time
+        # (the async front-end stamps at admission), stamp only if unset.
+        if not r.t_submit:
+            r.t_submit = now
+    done: List[ServeRequest] = []
     steps = 0
     queue = list(requests)
     while queue:
@@ -134,13 +234,14 @@ def serve(cfg, params, requests: List[Request], *, slots: int = 4,
         queue = queue[slots:]
         # pad the wave with a dummy clone so the batch shape is static
         while len(wave) < slots:
-            wave.append(Request(rid=-1, prompt=wave[0].prompt, max_new=1))
+            wave.append(ServeRequest(rid=-1, prompt=wave[0].prompt, max_new=1))
         steps += server.run_wave(wave)
         done.extend(r for r in wave if r.rid >= 0)
 
     total_new = sum(len(r.out) for r in done)
     t0 = min(r.t_submit for r in done)
     t1 = max(r.t_done for r in done)
+    ttfts = [r.t_first - r.t_submit for r in done]
     return {
         "n_requests": len(done),
         "requests_served": len(done),
@@ -148,9 +249,10 @@ def serve(cfg, params, requests: List[Request], *, slots: int = 4,
         "new_tokens": total_new,
         "wall_s": round(t1 - t0, 3),
         "tokens_per_s": round(total_new / max(1e-9, t1 - t0), 2),
-        "mean_ttft_s": round(float(np.mean(
-            [r.t_first - r.t_submit for r in done])), 3) if done else 0.0,
+        "mean_ttft_s": round(float(np.mean(ttfts)), 3) if done else 0.0,
+        "p99_ttft_s": round(float(np.percentile(ttfts, 99)), 4) if done else 0.0,
         "outputs": {r.rid: r.out[:8] for r in done},
+        "results": [ServeResult.of(r) for r in done],
     }
 
 
@@ -191,20 +293,6 @@ class Tenant:
     fan_idx: Optional[jax.Array] = None   # (n_max, event_cap) i32
     fan_mask: Optional[jax.Array] = None  # (n_max, event_cap) f32
     plan: Optional["object"] = None       # dispatch_policy.DispatchPlan
-
-
-@dataclasses.dataclass
-class SNNRequest:
-    rid: int
-    tenant: str
-    ext: np.ndarray                       # (T_req, n_in) input spike train
-    n_ticks: int                          # tick budget for this request
-    rewards: Optional[np.ndarray] = None  # (T_req,) dopamine (R-STDP servers)
-    counts: Optional[np.ndarray] = None   # (n_out,) rate-decoded spike counts
-    pred: Optional[int] = None            # argmax over output neurons
-    t_submit: float = 0.0
-    t_first: Optional[float] = None
-    t_done: Optional[float] = None
 
 
 def pad_tenant_params(params, n_max: int):
@@ -252,7 +340,9 @@ class SNNServer:
                  mode: str = "fixed_leak", backend: str = "jnp",
                  plasticity=None, event_density: Optional[float] = None,
                  event_cap: Optional[int] = None, telemetry: bool = True,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 options: Optional[EngineOptions] = None,
+                 chunk_ticks: Optional[int] = None):
         """Args (beyond the obvious):
 
         backend: the default tick backend every tenant rides.
@@ -273,10 +363,24 @@ class SNNServer:
           metrics; False serves the exact telemetry-free programs.
         registry: a :class:`~repro.obs.metrics.MetricsRegistry` to report
           into; defaults to a fresh private one (``server.registry``).
+        options: a validated :class:`~repro.core.engine.EngineOptions`
+          superseding the per-call engine statics (``mode`` / ``backend``
+          / ``plasticity`` / ``telemetry``) -- the preferred spelling;
+          the individual kwargs remain as a compatibility shim.
+        chunk_ticks: tick-chunk size for :meth:`serve_continuous`
+          (default ``max(1, min(8, max_ticks // 4))``): smaller chunks
+          retire/refill slots sooner (lower TTFT, higher goodput under
+          mixed budgets) at more per-chunk host dispatch overhead.
         """
         from repro.core.engine import TickEngine
         from repro.plasticity import PlasticityParams
 
+        if options is not None:
+            mode = options.mode
+            backend = options.backend
+            telemetry = options.telemetry
+            if options.plasticity is not None:
+                plasticity = options.plasticity
         self.n_max = int(n_max)
         self.slots = int(slots)
         self.max_ticks = int(max_ticks)
@@ -284,17 +388,26 @@ class SNNServer:
         self.event_density = event_density
         self.event_cap = int(event_cap or max(1, n_max // 4))
         self.telemetry = bool(telemetry)
+        self.chunk_ticks = int(
+            max(1, min(8, self.max_ticks // 4))
+            if chunk_ticks is None else chunk_ticks)
+        if not (1 <= self.chunk_ticks <= self.max_ticks):
+            raise ValueError(
+                f"chunk_ticks must lie in [1, max_ticks={self.max_ticks}], "
+                f"got {self.chunk_ticks}")
         if plasticity is None:
             plasticity = PlasticityParams.make(
                 "stdp", a_plus=0.5, a_minus=0.25, w_min=0.0, w_max=255.0)
-        self._mk_engine = lambda b: TickEngine(mode=mode, backend=b,
-                                               plasticity=plasticity,
-                                               telemetry=self.telemetry)
+        self._mk_engine = lambda b: TickEngine(EngineOptions(
+            mode=mode, backend=b, plasticity=plasticity,
+            telemetry=self.telemetry))
         self.engine = self._mk_engine(backend)
         self._engines = {backend: self.engine}
         self.tenants: Dict[str, Tenant] = {}
         self._compiles: Dict[str, int] = {}   # per-program, TRACE time only
         self._runs: Dict[str, object] = {}
+        self._chunk_runs: Dict[tuple, object] = {}
+        self._fresh_zeros = None
         self._tenant_obs: Dict[str, Dict] = {}  # accumulated telemetry
         self.registry = registry if registry is not None else MetricsRegistry()
         r = self.registry
@@ -302,12 +415,22 @@ class SNNServer:
             "snn_requests_total", "requests served to completion")
         self._c_rejected = r.counter(
             "snn_requests_rejected_total", "requests refused at admission")
+        self._c_rej_reason = r.counter(
+            "snn_admission_rejections_total",
+            "admission rejections, by reason", ("reason",))
         self._c_waves = r.counter(
             "snn_waves_total", "waves run, by resident program", ("backend",))
+        self._c_chunks = r.counter(
+            "snn_chunks_total",
+            "continuous-admission chunks run, by resident program",
+            ("backend",))
         self._c_spikes = r.counter(
             "snn_spikes_out_total", "rate-decoded output spikes")
         self._c_slot_ticks = r.counter(
             "snn_slot_ticks_total", "slot-ticks executed (slots x ticks)")
+        self._c_useful_ticks = r.counter(
+            "snn_useful_slot_ticks_total",
+            "slot-ticks inside a live request's budget (goodput numerator)")
         self._c_overflow = r.counter(
             "snn_event_overflow_ticks_total",
             "event-backend ticks that overflowed k_active to dense fallback")
@@ -317,12 +440,20 @@ class SNNServer:
         self._c_dw = r.counter(
             "snn_weight_delta_l1_total", "summed |dw| applied by plasticity")
         self._g_queue = r.gauge("snn_queue_depth", "requests awaiting a wave")
+        self._g_busy = r.gauge(
+            "snn_slots_busy", "slots holding a live request right now")
         self._g_goodput = r.gauge(
-            "snn_slot_ticks_per_s", "goodput of the last serve() call")
+            "snn_slot_ticks_per_s", "raw slot-tick rate of the last serve call")
+        self._g_useful_goodput = r.gauge(
+            "snn_goodput_slot_ticks_per_s",
+            "useful (in-budget) slot-ticks per second of the last serve call")
         self._h_ttft = r.histogram(
-            "snn_ttft_seconds", "submit-to-first-output latency")
+            "snn_ttft_seconds", "enqueue-to-first-output latency")
         self._h_wave = r.histogram(
             "snn_wave_seconds", "wave wall time, by resident program",
+            ("backend",))
+        self._h_chunk = r.histogram(
+            "snn_chunk_seconds", "chunk wall time, by resident program",
             ("backend",))
 
     @property
@@ -337,6 +468,17 @@ class SNNServer:
             self._runs[backend] = jax.jit(
                 functools.partial(self._wave_fn, backend))
         return self._runs[backend]
+
+    def _chunk_run_for(self, backend: str, chunk: int):
+        """The jitted chunked step -- one resident program per
+        (backend, chunk size), traced once; slot refills only rewrite
+        its array arguments."""
+        key = (backend, int(chunk))
+        if key not in self._chunk_runs:
+            self._engines.setdefault(backend, self._mk_engine(backend))
+            self._chunk_runs[key] = jax.jit(
+                functools.partial(self._chunk_fn, backend, int(chunk)))
+        return self._chunk_runs[key]
 
     # -- tenant registry ---------------------------------------------------
 
@@ -444,9 +586,56 @@ class SNNServer:
         counts = (raster * tmask[:, :, None]).sum(axis=1)   # (S, N) rate code
         return (counts, w2, out[2]) if self.telemetry else (counts, w2)
 
+    def _chunk_fn(self, backend, chunk, params, carry, ext, plastic_c,
+                  rewards, offset, budget, counts_acc,
+                  fan_idx=None, fan_mask=None):
+        """The continuous-admission step: run every resident slot for
+        ``chunk`` ticks from its carried state.
+
+        ``(slot-batched params, slot-batched TickCarry, (S,chunk,N) ext,
+        (S,N,N) mask, (S,chunk) rewards, (S,) tick offsets, (S,)
+        budgets, (S,N) running counts[, fan-in lists]) -> (next carry,
+        (S,N) updated running counts)``.
+
+        Counts accumulate *on device* -- the host only reads a slot's
+        row back when its request retires, so consecutive chunks
+        dispatch without a host round-trip between them.
+
+        Everything per-request is *runtime data* -- offsets, budgets,
+        the carry, even which tenant owns a slot (its registers are just
+        array values) -- so one trace serves every refill; only the
+        chunk size and backend are static. ``learn_until=budget`` rides
+        the carry's own tick counter, which persists across chunks, so
+        plasticity stops at exactly the same absolute tick as the wave
+        path and the learned weights come back bit-identical. The count
+        mask compares the absolute tick index (``offset + arange``)
+        against the budget, so partial counts summed across chunks equal
+        the wave path's one-shot masked sum exactly (small integers in
+        f32 -- order-free)."""
+        from repro.kernels.ops import EventFanIn
+
+        key = f"chunk/{backend}"
+        self._compiles[key] = self._compiles.get(key, 0) + 1
+        engine = self._engines[backend]
+
+        def per_slot(p, c, e, pc, rew, until, fi, fm):
+            nbrs = None if fi is None else EventFanIn(idx=fi, mask=fm)
+            c2, raster = engine.chunk(
+                p, c, e, chunk, rewards=rew, plastic_c=pc,
+                learn_until=until, neighbors=nbrs)
+            return c2, raster
+
+        carry2, raster = jax.vmap(per_slot)(
+            params, carry, ext, plastic_c, rewards, budget,
+            fan_idx, fan_mask)
+        t_abs = offset[:, None] + jnp.arange(chunk)[None, :]     # (S, chunk)
+        tmask = (t_abs < budget[:, None]).astype(raster.dtype)
+        counts = (raster * tmask[:, :, None]).sum(axis=1)        # (S, N)
+        return carry2, counts_acc + counts
+
     # -- wave assembly (host side) ----------------------------------------
 
-    def _assemble(self, reqs: List[SNNRequest]):
+    def _assemble(self, reqs: List[ServeRequest]):
         S, T, N = self.slots, self.max_ticks, self.n_max
         stack = lambda leaves: jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
         params = stack([self.tenants[r.tenant].params for r in reqs])
@@ -470,7 +659,7 @@ class SNNServer:
         fan_mask = jnp.stack([self.tenants[r.tenant].fan_mask for r in reqs])
         return args + (fan_idx, fan_mask)
 
-    def run_wave(self, reqs: List[SNNRequest]) -> None:
+    def run_wave(self, reqs: List[ServeRequest]) -> None:
         """One wave: S tenant register images in, S rate-decoded outputs
         (and, for plastic tenants, learned weights written back).
 
@@ -560,19 +749,74 @@ class SNNServer:
             }
         return rep
 
-    def _empty_stats(self, rejected: int) -> Dict:
-        """A well-formed zero report: no waves ran, nothing was served."""
-        return {"n_requests": 0, "requests_served": 0,
-                "requests_rejected": rejected,
-                "n_tenants": 0, "waves": 0, "ticks": 0,
-                "spikes_out": 0.0, "wall_s": 0.0, "spikes_per_s": 0.0,
-                "slot_ticks_per_s": 0.0, "mean_ttft_s": 0.0,
-                "compiles": self.compiles,
-                "recompiles_after_warmup": sum(
-                    max(0, c - 1) for c in self._compiles.values()),
-                "backends": {}, "preds": {}}
+    def _stats(self, *, mode: str, done: List[ServeRequest],
+               n_rejected: int, waves: int = 0, chunks: int = 0,
+               ticks: int = 0, slot_ticks: int = 0,
+               wall_s: float = 0.0) -> Dict:
+        """ONE stats schema for the wave path, the continuous path and
+        the empty report -- identical key sets, no drift (pinned in
+        tests/test_serve_continuous.py).
 
-    def serve(self, requests: List[SNNRequest]) -> Dict:
+        ``slot_ticks_per_s`` is the raw rate (every tick the fabric ran,
+        padding and post-budget ticks included); the goodput rate counts
+        only ticks inside a live request's budget -- the quantity
+        continuous admission exists to improve.
+        """
+        wall = max(1e-9, wall_s)
+        ttfts = [r.t_first - r.t_submit for r in done]
+        useful = sum(min(int(r.n_ticks), self.max_ticks) for r in done)
+        total_spikes = float(sum(r.counts.sum() for r in done)) if done else 0.0
+        return {
+            "mode": mode,
+            "n_requests": len(done),
+            "requests_served": len(done),
+            "requests_rejected": n_rejected,
+            "n_tenants": len({r.tenant for r in done}),
+            "waves": waves,
+            "chunks": chunks,
+            "ticks": ticks,
+            "useful_slot_ticks": useful,
+            "spikes_out": total_spikes,
+            "wall_s": round(wall_s, 3),
+            "spikes_per_s": round(total_spikes / wall, 1) if done else 0.0,
+            "slot_ticks_per_s": round(slot_ticks / wall, 1) if done else 0.0,
+            "goodput_slot_ticks_per_s":
+                round(useful / wall, 1) if done else 0.0,
+            "mean_ttft_s":
+                round(float(np.mean(ttfts)), 4) if done else 0.0,
+            "p99_ttft_s":
+                round(float(np.percentile(ttfts, 99)), 4) if done else 0.0,
+            "compiles": self.compiles,
+            # One trace per resident program (per backend, plus per
+            # (backend, chunk) for the continuous step) is warmup;
+            # anything past that is a retrace regression.
+            "recompiles_after_warmup": sum(
+                max(0, c - 1) for c in self._compiles.values()),
+            "backends": {
+                b: sum(1 for r in done
+                       if self.tenants[r.tenant].backend == b)
+                for b in sorted({self.tenants[r.tenant].backend
+                                 for r in done})},
+            "preds": {r.rid: r.pred for r in done},
+            "results": [ServeResult.of(r) for r in done],
+        }
+
+    def _empty_stats(self, rejected: int, mode: str = "wave") -> Dict:
+        """A well-formed zero report: nothing ran, nothing was served."""
+        return self._stats(mode=mode, done=[], n_rejected=rejected)
+
+    def _reject_unknown(self, requests: List[ServeRequest]):
+        """Split off requests naming an unregistered tenant (counted,
+        logged, never a KeyError mid-wave)."""
+        rejected = [r for r in requests if r.tenant not in self.tenants]
+        if rejected:
+            self._c_rejected.inc(len(rejected))
+            self._c_rej_reason.inc(len(rejected), reason="unknown_tenant")
+            log_event("snn_requests_rejected", n=len(rejected),
+                      tenants=sorted({r.tenant for r in rejected}))
+        return [r for r in requests if r.tenant in self.tenants], rejected
+
+    def serve(self, requests: List[ServeRequest]) -> Dict:
         """Wave admission over a request queue + the LM server's stats.
 
         Admission first rejects requests naming an unregistered tenant
@@ -592,17 +836,14 @@ class SNNServer:
         An empty or fully-rejected queue returns the zero report with
         ``requests_served: 0`` -- never a ``np.mean([])`` warning.
         """
-        rejected = [r for r in requests if r.tenant not in self.tenants]
-        if rejected:
-            self._c_rejected.inc(len(rejected))
-            log_event("snn_requests_rejected", n=len(rejected),
-                      tenants=sorted({r.tenant for r in rejected}))
-        requests = [r for r in requests if r.tenant in self.tenants]
+        requests, rejected = self._reject_unknown(requests)
         if not requests:
             return self._empty_stats(len(rejected))
+        now = time.time()
         for r in requests:
-            r.t_submit = time.time()
-        done: List[SNNRequest] = []
+            if not r.t_submit:   # TTFT from enqueue: keep caller's stamp
+                r.t_submit = now
+        done: List[ServeRequest] = []
         waves = 0
         backends_in_use = sorted(
             {self.tenants[r.tenant].backend for r in requests})
@@ -624,46 +865,350 @@ class SNNServer:
                         deferred.append(r)
                 queue = deferred
                 while len(wave) < self.slots:  # static batch: pad w/ dummy
-                    wave.append(SNNRequest(
+                    wave.append(ServeRequest(
                         rid=-1, tenant=wave[0].tenant,
                         ext=np.zeros((1, 1), np.float32), n_ticks=0))
                 self.run_wave(wave)
                 done.extend(r for r in wave if r.rid >= 0)
                 waves += 1
         self._g_queue.set(0)
-        total_spikes = float(sum(r.counts.sum() for r in done))
         t0 = min(r.t_submit for r in done)
         t1 = max(r.t_done for r in done)
-        goodput = round(
-            waves * self.max_ticks * self.slots / max(1e-9, t1 - t0), 1)
+        stats = self._stats(
+            mode="wave", done=done, n_rejected=len(rejected), waves=waves,
+            ticks=waves * self.max_ticks,
+            slot_ticks=waves * self.max_ticks * self.slots,
+            wall_s=t1 - t0)
         self._c_requests.inc(len(done))
-        self._c_spikes.inc(total_spikes)
-        self._g_goodput.set(goodput)
+        self._c_spikes.inc(stats["spikes_out"])
+        self._c_useful_ticks.inc(stats["useful_slot_ticks"])
+        self._g_goodput.set(stats["slot_ticks_per_s"])
+        self._g_useful_goodput.set(stats["goodput_slot_ticks_per_s"])
         for r in done:
             self._h_ttft.observe(r.t_first - r.t_submit)
-        return {
-            "n_requests": len(done),
-            "requests_served": len(done),
-            "requests_rejected": len(rejected),
-            "n_tenants": len({r.tenant for r in done}),
-            "waves": waves,
-            "ticks": waves * self.max_ticks,
-            "spikes_out": total_spikes,
-            "wall_s": round(t1 - t0, 3),
-            "spikes_per_s": round(total_spikes / max(1e-9, t1 - t0), 1),
-            "slot_ticks_per_s": goodput,
-            "mean_ttft_s": round(float(np.mean(
-                [r.t_first - r.t_submit for r in done])), 4) if done else 0.0,
-            "compiles": self.compiles,
-            # One trace per resident program (per backend) is warmup;
-            # anything past that is a retrace regression.
-            "recompiles_after_warmup": sum(
-                max(0, c - 1) for c in self._compiles.values()),
-            "backends": {b: sum(1 for r in done
-                                if self.tenants[r.tenant].backend == b)
-                         for b in backends_in_use},
-            "preds": {r.rid: r.pred for r in done},
-        }
+        return stats
+
+    # -- continuous admission (per-slot refill, not per-wave) --------------
+
+    def _fresh_slot_carry(self, tenant: Tenant):
+        """A fresh single-slot :class:`~repro.core.engine.TickCarry` for
+        a just-admitted request: zeroed state/traces/telemetry, the
+        tenant's current (possibly learned) weights.
+
+        The zero leaves are tenant-independent (every tenant rides the
+        same padded fabric), so they are built once and shared -- a
+        refill must not pay a dozen eager zero-array dispatches."""
+        from repro.core.engine import TickCarry
+        from repro.core.network import SNNState
+        from repro.plasticity import PlasticityState
+
+        if self._fresh_zeros is None:
+            telem = None
+            if self.telemetry:
+                from repro.obs.telemetry import TickTelemetry
+
+                telem = TickTelemetry.zeros(())
+            self._fresh_zeros = (SNNState.zeros((), self.n_max),
+                                 PlasticityState.zeros((), self.n_max),
+                                 telem)
+        state, plast, telem = self._fresh_zeros
+        return TickCarry(state=state, plast=plast,
+                         w=tenant.params.w, telem=telem)
+
+    def _fill_run_for(self, backend: str):
+        """The jitted slot-refill program for ``backend``: writes one
+        tenant image into slot ``i`` of the stacked program inputs in a
+        single compiled call (one trace per backend; an eager
+        ``.at[i].set`` per leaf costs ~1 ms each, which would dominate
+        the chunk loop)."""
+        key = ("fill", backend)
+        if key not in self._chunk_runs:
+            def _fill(stacked, image, i):
+                k = f"fill/{backend}"
+                self._compiles[k] = self._compiles.get(k, 0) + 1
+                return jax.tree.map(lambda a, b: a.at[i].set(b),
+                                    stacked, image)
+
+            self._chunk_runs[key] = jax.jit(_fill)
+        return self._chunk_runs[key]
+
+    @staticmethod
+    def _next_admittable(pending: deque, busy_plastic: set,
+                         tenants: Dict[str, Tenant]):
+        """Pop the first FIFO request whose tenant isn't a currently
+        resident *plastic* tenant (two slots learning from the same
+        pre-admission registers would race the write-back -- the wave
+        path's one-plastic-request-per-wave rule, continuized)."""
+        for idx, r in enumerate(pending):
+            t = tenants[r.tenant]
+            if t.plastic and r.tenant in busy_plastic:
+                continue
+            del pending[idx]
+            return r
+        return None
+
+    def _route(self, r: ServeRequest, pending_map: Dict[str, deque],
+               rejected: List[ServeRequest]) -> None:
+        """Admit one (feeder-supplied) request into the right backend
+        queue, stamping its enqueue time if the caller didn't."""
+        if not r.t_submit:
+            r.t_submit = time.time()
+        if r.tenant not in self.tenants:
+            self._c_rejected.inc()
+            self._c_rej_reason.inc(reason="unknown_tenant")
+            log_event("snn_requests_rejected", n=1, tenants=[r.tenant])
+            rejected.append(r)
+            return
+        b = self.tenants[r.tenant].backend
+        pending_map.setdefault(b, deque()).append(r)
+
+    def serve_continuous(
+        self,
+        requests: Optional[List[ServeRequest]] = None,
+        *,
+        chunk_ticks: Optional[int] = None,
+        feeder: Optional[Callable[[], Optional[ServeRequest]]] = None,
+        on_complete: Optional[Callable[[ServeRequest], None]] = None,
+    ) -> Dict:
+        """Per-slot continuous admission: the tentpole replacement for
+        wave admission.
+
+        Instead of draining a whole wave before anything new admits, the
+        fabric runs in chunks of ``chunk_ticks`` ticks; after each chunk,
+        slots whose request exhausted its tick budget *retire* (decode,
+        write back learned weights, complete) and are *refilled* from
+        the queue -- without recompiling: the chunked step is one jitted
+        program per (backend, chunk size), and a refill only rewrites
+        its array arguments (registers, carry slices, budgets). Short
+        requests no longer pay for long ones; a request's latency is its
+        own budget plus at most ``chunk_ticks - 1`` overshoot ticks.
+
+        Args:
+          requests: the initial queue (any mix of tenants/backends).
+          chunk_ticks: override the server's default chunk size.
+          feeder: optional non-blocking callable polled once per chunk
+            for late-arriving requests (``None`` = none right now); this
+            is how the async front-end streams admissions into a running
+            loop. The call returns when every queue is drained and the
+            feeder (if any) has nothing more to give.
+          on_complete: optional callback invoked (from this thread) with
+            each request as it completes -- the async front-end resolves
+            per-request futures here, long before the batch returns.
+
+        Returns the same stats schema as :meth:`serve`, with
+        ``mode="continuous"`` and chunk/goodput accounting filled in.
+        Per-tenant outputs are bit-exact vs the wave path (oracle test:
+        tests/test_serve_continuous.py).
+        """
+        chunk = int(self.chunk_ticks if chunk_ticks is None else chunk_ticks)
+        if not (1 <= chunk <= self.max_ticks):
+            raise ValueError(
+                f"chunk_ticks must lie in [1, max_ticks={self.max_ticks}], "
+                f"got {chunk}")
+        t_start = time.time()
+        requests, rejected = self._reject_unknown(list(requests or []))
+        for r in requests:
+            if not r.t_submit:
+                r.t_submit = t_start
+        pending_map: Dict[str, deque] = {}
+        for r in requests:
+            pending_map.setdefault(
+                self.tenants[r.tenant].backend, deque()).append(r)
+        done: List[ServeRequest] = []
+        chunks = 0
+        fed_dry = feeder is None
+        while True:
+            live = [b for b, q in pending_map.items() if q]
+            if not live:
+                if fed_dry:
+                    break
+                # One more feeder poll before giving up: a request may
+                # have arrived between the last chunk and now.
+                n_before = len(rejected)
+                got = False
+                while feeder is not None:
+                    r = feeder()
+                    if r is None:
+                        break
+                    self._route(r, pending_map, rejected)
+                    got = True
+                if not got and len(rejected) == n_before:
+                    break
+                continue
+            # FIFO across backends: run the program whose queue holds
+            # the oldest waiting request.
+            backend = min(live, key=lambda b: pending_map[b][0].t_submit)
+            chunks += self._continuous_group(
+                backend, pending_map, rejected, chunk, feeder, on_complete,
+                done)
+        self._g_queue.set(0)
+        self._g_busy.set(0)
+        if not done:
+            return self._empty_stats(len(rejected), mode="continuous")
+        t0 = min(r.t_submit for r in done)
+        t1 = max(r.t_done for r in done)
+        stats = self._stats(
+            mode="continuous", done=done, n_rejected=len(rejected),
+            chunks=chunks, ticks=chunks * chunk,
+            slot_ticks=chunks * chunk * self.slots, wall_s=t1 - t0)
+        self._c_spikes.inc(stats["spikes_out"])
+        self._g_goodput.set(stats["slot_ticks_per_s"])
+        self._g_useful_goodput.set(stats["goodput_slot_ticks_per_s"])
+        return stats
+
+    def _continuous_group(self, backend: str, pending_map: Dict[str, deque],
+                          rejected: List[ServeRequest], chunk: int,
+                          feeder, on_complete,
+                          done: List[ServeRequest]) -> int:
+        """Run one backend's resident chunked program until its queue
+        drains; returns the number of chunks run.
+
+        Slot state (which request, tick offset, accumulated counts)
+        lives host-side; the compiled step sees only arrays. Refill
+        writes one slot's registers/carry via ``.at[i].set`` -- values,
+        not shapes, so the program never retraces (pinned:
+        ``recompiles_after_warmup == 0`` across refills)."""
+        S, N = self.slots, self.n_max
+        pending = pending_map.setdefault(backend, deque())
+        run = self._chunk_run_for(backend, chunk)
+        fill_run = self._fill_run_for(backend)
+        slot_req: List[Optional[ServeRequest]] = [None] * S
+        slot_tenant: List[Optional[Tenant]] = [None] * S
+        busy_plastic: set = set()
+        params_s = carry_s = plastic_c_s = counts_acc = None
+        fan_idx_s = fan_mask_s = None
+        zero_row = jnp.zeros((N,), jnp.float32)   # refill counts reset
+        offset = np.zeros((S,), np.int64)   # absolute ticks already run
+        budget = np.zeros((S,), np.int32)
+        chunks = 0
+
+        def fill(i: int, r: ServeRequest) -> None:
+            nonlocal params_s, carry_s, plastic_c_s, counts_acc
+            nonlocal fan_idx_s, fan_mask_s
+            t = self.tenants[r.tenant]
+            slot_req[i], slot_tenant[i] = r, t
+            offset[i] = 0
+            budget[i] = min(int(r.n_ticks), self.max_ticks)
+            if t.plastic:
+                busy_plastic.add(t.name)
+            fresh = self._fresh_slot_carry(t)
+            if params_s is None:
+                # First fill seeds EVERY slot with this tenant's image;
+                # idle slots ride along at budget 0 (masked to nothing),
+                # exactly like the wave path's dummy padding.
+                bcast = lambda x: jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (S,) + a.shape), x)
+                params_s = bcast(t.params)
+                carry_s = bcast(fresh)
+                counts_acc = jnp.zeros((S, N), jnp.float32)
+                plastic_c_s = jnp.broadcast_to(
+                    t.plastic_c, (S,) + t.plastic_c.shape)
+                if backend == "event":
+                    fan_idx_s = jnp.broadcast_to(
+                        t.fan_idx, (S,) + t.fan_idx.shape)
+                    fan_mask_s = jnp.broadcast_to(
+                        t.fan_mask, (S,) + t.fan_mask.shape)
+                return
+            ev = backend == "event"
+            image = (t.params, fresh, t.plastic_c, zero_row,
+                     t.fan_idx if ev else None, t.fan_mask if ev else None)
+            stacked = (params_s, carry_s, plastic_c_s, counts_acc,
+                       fan_idx_s, fan_mask_s)
+            (params_s, carry_s, plastic_c_s, counts_acc,
+             fan_idx_s, fan_mask_s) = fill_run(stacked, image, i)
+
+        def retire(i: int, now: float, row: Optional[np.ndarray] = None,
+                   tel=None) -> None:
+            r, t = slot_req[i], slot_tenant[i]
+            if row is None:   # the retire-time sync point
+                row = np.asarray(counts_acc[i])
+            out = row[t.n - t.n_out: t.n]
+            r.counts = out
+            r.pred = int(out.argmax())
+            r.t_first = r.t_done = now
+            if self.telemetry and carry_s is not None and offset[i] > 0:
+                if tel is None:
+                    tel = jax.tree.map(np.asarray, carry_s.telem)
+                self._observe_slot(t, tel, i)
+                self._c_overflow.inc(float(tel.overflow[i]))
+                self._c_policy.inc(float(tel.policy_dense[i]))
+                self._c_dw.inc(float(tel.dw_l1[i]))
+            if t.plastic:
+                # Register write-back, same as the wave path: the
+                # tenant's next request starts from what this one learned.
+                t.params = dataclasses.replace(t.params, w=carry_s.w[i])
+                busy_plastic.discard(t.name)
+            slot_req[i] = slot_tenant[i] = None
+            done.append(r)
+            self._c_requests.inc()
+            self._c_useful_ticks.inc(int(budget[i]))
+            self._h_ttft.observe(r.t_done - r.t_submit)
+            if on_complete is not None:
+                on_complete(r)
+
+        while True:
+            # Stream in late arrivals (the async front-end's feeder).
+            while feeder is not None:
+                r = feeder()
+                if r is None:
+                    break
+                self._route(r, pending_map, rejected)
+            # Refill free slots FIFO; zero-budget requests complete
+            # without running a tick (counts all-zero, nothing learned).
+            for i in range(S):
+                if slot_req[i] is None and pending:
+                    r = self._next_admittable(pending, busy_plastic,
+                                              self.tenants)
+                    if r is not None:
+                        fill(i, r)
+                if slot_req[i] is not None and budget[i] <= offset[i]:
+                    retire(i, time.time())
+            busy = [i for i in range(S) if slot_req[i] is not None]
+            self._g_queue.set(sum(len(q) for q in pending_map.values()))
+            self._g_busy.set(len(busy))
+            if not busy:
+                if pending:
+                    continue   # freed a plastic tenant; re-admit
+                break
+            ext = np.zeros((S, chunk, N), np.float32)
+            rew = np.zeros((S, chunk), np.float32)
+            for i in busy:
+                r = slot_req[i]
+                o = int(offset[i])
+                if r.ext is not None and o < r.ext.shape[0]:
+                    seg = np.asarray(r.ext[o:o + chunk], np.float32)
+                    ext[i, :seg.shape[0], :seg.shape[1]] = seg
+                if r.rewards is not None and o < len(r.rewards):
+                    seg = np.asarray(r.rewards[o:o + chunk], np.float32)
+                    rew[i, :seg.shape[0]] = seg
+            args = (params_s, carry_s, jnp.asarray(ext), plastic_c_s,
+                    jnp.asarray(rew), jnp.asarray(offset, jnp.int32),
+                    jnp.asarray(budget), counts_acc)
+            if backend == "event":
+                args += (fan_idx_s, fan_mask_s)
+            # Dispatch-side timing: counts stay on device, so this span
+            # does NOT wait for the chunk to execute -- consecutive
+            # chunks pipeline, and the device queue only drains at a
+            # retire (the counts row read).
+            with span(f"snn/chunk/{backend}", histogram=self._h_chunk,
+                      backend=backend):
+                carry_s, counts_acc = run(*args)
+            chunks += 1
+            self._c_chunks.inc(backend=backend)
+            self._c_slot_ticks.inc(S * chunk)
+            for i in busy:
+                offset[i] += chunk
+            due = [i for i in busy if offset[i] >= budget[i]]
+            if due:
+                # One (S, N) read-back (and one telemetry pull) serves
+                # every retire this round.
+                rows = np.asarray(counts_acc)
+                tel = (jax.tree.map(np.asarray, carry_s.telem)
+                       if self.telemetry else None)
+                now = time.time()
+                for i in due:
+                    retire(i, now, rows[i], tel)
+        return chunks
 
 
 def make_demo_tenants(server: SNNServer, n_tenants: int = 8, *,
@@ -715,7 +1260,7 @@ def make_demo_tenants(server: SNNServer, n_tenants: int = 8, *,
 
 
 def make_demo_requests(server: SNNServer, names: List[str], n_requests: int,
-                       *, seed: int = 0) -> List[SNNRequest]:
+                       *, seed: int = 0) -> List[ServeRequest]:
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):
@@ -725,7 +1270,7 @@ def make_demo_requests(server: SNNServer, names: List[str], n_requests: int,
         # sized so a spike can actually cross the tenants' u8 thresholds.
         ext = ((rng.random((ticks, t.n_in)) < 0.3)
                * rng.integers(80, 255, (ticks, t.n_in))).astype(np.float32)
-        reqs.append(SNNRequest(rid=i, tenant=t.name, ext=ext, n_ticks=ticks))
+        reqs.append(ServeRequest(rid=i, tenant=t.name, ext=ext, n_ticks=ticks))
     return reqs
 
 
@@ -735,14 +1280,21 @@ def serve_snn_main(cfg, args) -> Dict:
     backend = "jnp" if cfg.snn_backend == "event" else cfg.snn_backend
     server = SNNServer(n_max=cfg.n_neurons, slots=args.slots,
                        max_ticks=cfg.n_ticks, mode=cfg.snn_mode,
-                       backend=backend, event_density=0.2)
+                       backend=backend, event_density=0.2,
+                       chunk_ticks=max(
+                           1, min(cfg.snn_chunk_ticks, cfg.n_ticks)))
     names = make_demo_tenants(server, max(8, args.slots))
     print(f"serving SNN fabric n_max={server.n_max}: {len(names)} resident "
           f"tenants, {args.slots} slots, {args.requests} requests")
     reqs = make_demo_requests(server, names, max(args.requests, len(names)))
     with profile(getattr(args, "profile", None)):
-        stats = server.serve(reqs)
+        if getattr(args, "continuous", False):
+            stats = server.serve_continuous(reqs)
+        else:
+            stats = server.serve(reqs)
     for k, v in stats.items():
+        if k == "results":
+            continue
         print(f"{k}: {v}")
     report = server.tenant_report()
     if report:
@@ -771,6 +1323,9 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--continuous", action="store_true",
+                    help="use per-slot continuous admission instead of "
+                         "synchronous waves (SNN server only)")
     ap.add_argument("--profile", metavar="DIR", default=None,
                     help="capture a jax.profiler trace of the serve run "
                          "into DIR (view with TensorBoard/Perfetto)")
@@ -801,6 +1356,8 @@ def main(argv=None):
         stats = serve(cfg, params, reqs, slots=args.slots,
                       max_len=args.max_len)
     for k, v in stats.items():
+        if k == "results":
+            continue
         print(f"{k}: {v}")
     return stats
 

@@ -156,6 +156,27 @@ class Histogram(_Instrument):
     def sum(self, **labels) -> float:
         return self._sum.get(_label_key(self.labelnames, labels), 0.0)
 
+    def percentile(self, q: float, **labels) -> float:
+        """Approximate ``q``-quantile (``q`` in [0, 1]) from the bucket
+        bounds -- the Prometheus ``histogram_quantile`` estimate, server
+        side. Returns the upper bound of the bucket holding the
+        quantile observation (the last finite bound for the +Inf
+        bucket -- a deliberate under-read, same as Prometheus), and 0.0
+        with no observations."""
+        if not (0.0 <= q <= 1.0):
+            raise ValueError(f"q must lie in [0, 1], got {q}")
+        key = _label_key(self.labelnames, labels)
+        n = self._n.get(key, 0)
+        if n == 0:
+            return 0.0
+        rank = q * n
+        cum = 0
+        for bound, c in zip(self.buckets, self._counts[key]):
+            cum += c
+            if cum >= rank:
+                return float(bound)
+        return float(self.buckets[-1])
+
     def expose(self) -> List[str]:
         lines = []
         for key in sorted(self._counts):

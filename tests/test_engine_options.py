@@ -1,0 +1,175 @@
+"""EngineOptions: one validated statics bundle + chunked continuation.
+
+Pins the API-redesign contract: every per-call static lives in a frozen
+``EngineOptions`` that validates *at construction* (invalid combos fail
+before any tracing), ``TickEngine(options)`` and the network wrappers
+accept it, the legacy kwargs shim still works behind a
+``DeprecationWarning``, and ``TickEngine.chunk`` resumed K times for T
+ticks is bit-identical to one K*T rollout -- the property continuous
+admission is built on.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import connectivity
+from repro.core.engine import EngineOptions, TickCarry, TickEngine
+from repro.core.lif import LIFParams
+from repro.core.network import (
+    SNNParams, SNNState, learning_rollout, rollout,
+)
+from repro.plasticity import PlasticityParams, PlasticityState
+
+jax.config.update("jax_platform_name", "cpu")
+
+N = 12
+
+
+def _params(n=N, *, seed=0):
+    rng = np.random.default_rng(seed)
+    c = connectivity.sparse_random(n, density=0.4, seed=seed)
+    return SNNParams(
+        w=jnp.asarray(rng.uniform(0, 2.0, (n, n)), jnp.float32),
+        c=jnp.asarray(c, jnp.float32),
+        w_in=jnp.eye(n, dtype=jnp.float32) * 2.0,
+        lif=LIFParams.make(n, v_th=1.5, leak=0.25, r_ref=1))
+
+
+def _ext(ticks, n=N, *, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.random((ticks, n)) < 0.35) * 1.0, jnp.float32)
+
+
+class TestValidation:
+    def test_defaults_validate(self):
+        opts = EngineOptions()
+        assert opts.backend == "jnp"
+        assert opts.mode == "fixed_leak"
+
+    def test_invalid_backend_fails_at_construction(self):
+        with pytest.raises(ValueError, match="backend"):
+            EngineOptions(backend="verilog")
+
+    def test_invalid_mode_fails_at_construction(self):
+        with pytest.raises(ValueError, match="mode"):
+            EngineOptions(mode="midpoint")
+
+    def test_knee_requires_fallback_overflow_eagerly(self):
+        # The combo the lazy kwargs path only catches at rollout time
+        # fails here before anything traces.
+        with pytest.raises(ValueError, match="event_knee requires"):
+            EngineOptions(backend="event", event_knee=4,
+                          event_overflow="strict")
+
+    def test_frozen(self):
+        opts = EngineOptions()
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            opts.backend = "event"
+
+
+class TestTickEngineConstruction:
+    def test_options_path(self):
+        opts = EngineOptions(backend="event", event_k_active=4)
+        eng = TickEngine(opts)
+        assert eng.backend == "event"
+        assert eng.event_k_active == 4
+        assert eng.options == opts
+
+    def test_options_path_does_not_warn(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            TickEngine(EngineOptions())
+            TickEngine()   # all-defaults is not "legacy kwargs"
+
+    def test_legacy_kwargs_warn(self):
+        with pytest.warns(DeprecationWarning, match="EngineOptions"):
+            eng = TickEngine(backend="event", event_k_active=4)
+        assert eng.backend == "event"
+
+    def test_options_and_kwargs_is_an_error(self):
+        with pytest.raises(TypeError, match="ONE of"):
+            TickEngine(EngineOptions(), backend="jnp")
+
+    def test_unknown_kwarg_is_an_error(self):
+        with pytest.raises(TypeError, match="unknown engine option"):
+            TickEngine(backened="jnp")   # typo'd name
+
+    def test_non_options_positional_is_an_error(self):
+        with pytest.raises(TypeError):
+            TickEngine("event")
+
+
+class TestWrapperOptions:
+    def test_rollout_options_matches_kwargs(self):
+        params, ext = _params(), _ext(8)
+        state = SNNState.zeros((), N)
+        _, r1 = rollout(params, state, ext, 8, backend="jnp",
+                        mode="euler")
+        _, r2 = rollout(params, state, ext, 8,
+                        options=EngineOptions(backend="jnp", mode="euler"))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+    def test_learning_rollout_options(self):
+        params, ext = _params(), _ext(8)
+        state = SNNState.zeros((), N)
+        pstate = PlasticityState.zeros((), N)
+        pp = PlasticityParams.make()
+        (_, _, w1), _ = learning_rollout(
+            params, state, pstate, ext, 8, plasticity=pp)
+        (_, _, w2), _ = learning_rollout(
+            params, state, pstate, ext, 8,
+            options=EngineOptions(plasticity=pp))
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+
+    def test_plan_engine_options(self):
+        from repro.core.dispatch_policy import plan as plan_dispatch
+
+        params = _params()
+        plan = plan_dispatch(np.asarray(params.c))
+        opts = plan.engine_options()
+        assert isinstance(opts, EngineOptions)
+        assert opts.backend in ("jnp", "event")
+        assert plan.engine_kwargs()["backend"] == opts.backend
+
+
+class TestChunkedContinuation:
+    @pytest.mark.parametrize("chunk", [1, 3, 4])
+    def test_chunks_bitexact_vs_one_shot(self, chunk):
+        T = 12
+        params, ext = _params(), _ext(T)
+        eng = TickEngine(EngineOptions())
+        state = SNNState.zeros((), N)
+        _, raster_ref = eng.rollout(params, state, ext, T)
+
+        carry = TickCarry(state=state)
+        rasters = []
+        for k in range(0, T, chunk):
+            carry, raster = eng.chunk(params, carry, ext[k:k + chunk], chunk)
+            rasters.append(np.asarray(raster))
+        np.testing.assert_array_equal(
+            np.concatenate(rasters), np.asarray(raster_ref))
+
+    @pytest.mark.parametrize("chunk", [2, 5])
+    def test_learning_chunks_bitexact_incl_learn_until(self, chunk):
+        T, budget = 10, 7
+        params, ext = _params(), _ext(T)
+        eng = TickEngine(EngineOptions(plasticity=PlasticityParams.make()))
+        state = SNNState.zeros((), N)
+        pstate = PlasticityState.zeros((), N)
+        (st1, ps1, w1), raster_ref = eng.learning_rollout(
+            params, state, pstate, ext, T, learn_until=budget)
+
+        carry = eng.init_learning_carry(params, state, pstate)
+        rasters = []
+        for k in range(0, T, chunk):
+            n = min(chunk, T - k)
+            carry, raster = eng.chunk(params, carry, ext[k:k + n], n,
+                                      learn_until=budget)
+            rasters.append(np.asarray(raster))
+        np.testing.assert_array_equal(
+            np.concatenate(rasters), np.asarray(raster_ref))
+        np.testing.assert_array_equal(np.asarray(carry.w), np.asarray(w1))

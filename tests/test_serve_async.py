@@ -1,0 +1,198 @@
+"""Async serving front-end: admission control + future-per-request.
+
+Exercises the seam between the asyncio world and the worker thread
+running the continuous scheduler: normal completion resolves futures
+with bit-real results, and every admission edge (queue overflow,
+per-tenant cap, shutdown, unknown tenant) rejects *before* touching
+the device, counted by reason in ``snn_admission_rejections_total``.
+"""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.serve import (
+    ServeRequest, ServeResult, SNNServer, make_demo_tenants,
+)
+from repro.launch.serve_async import AsyncSNNServer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _server(**kw):
+    kw.setdefault("n_max", 24)
+    kw.setdefault("slots", 4)
+    kw.setdefault("max_ticks", 12)
+    kw.setdefault("event_density", 0.2)
+    s = SNNServer(**kw)
+    names = make_demo_tenants(s, 6, seed=0)
+    return s, names
+
+
+def _req(server, names, rid, *, n_ticks=4, tenant=None, seed=0):
+    tenant = tenant or names[rid % len(names)]
+    t = server.tenants[tenant]
+    rng = np.random.default_rng(seed + rid)
+    ext = ((rng.random((max(1, n_ticks), t.n_in)) < 0.3) * 200.0
+           ).astype(np.float32)
+    return ServeRequest(rid=rid, tenant=tenant, ext=ext, n_ticks=n_ticks)
+
+
+class TestCompletion:
+    def test_requests_complete_with_results(self):
+        server, names = _server()
+
+        async def go():
+            front = AsyncSNNServer(server, max_queue=16)
+            try:
+                reqs = [_req(server, names, i) for i in range(6)]
+                return await asyncio.gather(*(front.submit(r) for r in reqs))
+            finally:
+                await front.aclose()
+
+        results = asyncio.run(go())
+        assert len(results) == 6
+        for res in results:
+            assert isinstance(res, ServeResult)
+            assert not res.rejected
+            assert res.counts is not None
+            assert res.ttft_s >= 0.0
+
+    def test_results_match_direct_continuous_serve(self):
+        server, names = _server()
+        twin = SNNServer(n_max=24, slots=4, max_ticks=12, event_density=0.2)
+        make_demo_tenants(twin, 6, seed=0)
+        direct = [_req(twin, names, i) for i in range(4)]
+        twin.serve_continuous(direct)
+
+        async def go():
+            front = AsyncSNNServer(server, max_queue=16)
+            try:
+                reqs = [_req(server, names, i) for i in range(4)]
+                return await asyncio.gather(*(front.submit(r) for r in reqs))
+            finally:
+                await front.aclose()
+
+        results = asyncio.run(go())
+        by_rid = {r.rid: r for r in results}
+        for d in direct:
+            np.testing.assert_array_equal(by_rid[d.rid].counts, d.counts)
+            assert by_rid[d.rid].pred == d.pred
+
+    def test_zero_recompiles_across_bursts(self):
+        server, names = _server()
+
+        async def burst(front, base):
+            reqs = [_req(server, names, base + i) for i in range(4)]
+            return await asyncio.gather(*(front.submit(r) for r in reqs))
+
+        async def go():
+            front = AsyncSNNServer(server, max_queue=16)
+            try:
+                await burst(front, 0)
+                warm = server.compiles
+                await burst(front, 100)
+                assert server.compiles == warm
+            finally:
+                await front.aclose()
+
+        asyncio.run(go())
+
+
+class TestAdmissionControl:
+    def _rejections(self, server, reason):
+        return server.registry.get(
+            "snn_admission_rejections_total").value(reason=reason)
+
+    def test_queue_overflow_rejected_and_counted(self):
+        server, names = _server()
+
+        async def go():
+            front = AsyncSNNServer(server, max_queue=2)
+            # Stall the worker by never letting it start: enqueue from
+            # inside the loop faster than slots drain is racy, so test
+            # the admission check directly against a full queue.
+            front._closed = False
+            with front._lock:
+                front._queue.extend(
+                    _req(server, names, 90 + i) for i in range(2))
+            res = await front.submit(_req(server, names, 99))
+            with front._lock:
+                front._queue.clear()
+            await front.aclose()
+            return res
+
+        res = asyncio.run(go())
+        assert res.rejected and res.reason == "queue_full"
+        assert self._rejections(server, "queue_full") == 1
+
+    def test_tenant_cap_rejected_and_counted(self):
+        server, names = _server()
+
+        async def go():
+            front = AsyncSNNServer(server, max_queue=16, tenant_cap=1)
+            with front._lock:
+                front._inflight[names[0]] = 1   # one already in flight
+            res = await front.submit(
+                _req(server, names, 0, tenant=names[0]))
+            with front._lock:
+                front._inflight.clear()
+            await front.aclose()
+            return res
+
+        res = asyncio.run(go())
+        assert res.rejected and res.reason == "tenant_cap"
+        assert self._rejections(server, "tenant_cap") == 1
+
+    def test_unknown_tenant_rejected(self):
+        server, names = _server()
+
+        async def go():
+            front = AsyncSNNServer(server)
+            try:
+                r = ServeRequest(rid=0, tenant="ghost",
+                                 ext=np.zeros((2, 4), np.float32), n_ticks=2)
+                return await front.submit(r)
+            finally:
+                await front.aclose()
+
+        res = asyncio.run(go())
+        assert res.rejected and res.reason == "unknown_tenant"
+        assert self._rejections(server, "unknown_tenant") == 1
+
+    def test_request_after_shutdown_rejected(self):
+        server, names = _server()
+
+        async def go():
+            front = AsyncSNNServer(server)
+            await front.aclose()
+            return await front.submit(_req(server, names, 0))
+
+        res = asyncio.run(go())
+        assert res.rejected and res.reason == "shutdown"
+        assert self._rejections(server, "shutdown") == 1
+
+    def test_constructor_validation(self):
+        server, _ = _server()
+        with pytest.raises(ValueError, match="max_queue"):
+            AsyncSNNServer(server, max_queue=0)
+        with pytest.raises(ValueError, match="tenant_cap"):
+            AsyncSNNServer(server, tenant_cap=0)
+
+
+class TestQueueDepthGauge:
+    def test_depth_returns_to_zero(self):
+        server, names = _server()
+
+        async def go():
+            front = AsyncSNNServer(server, max_queue=16)
+            try:
+                reqs = [_req(server, names, i) for i in range(5)]
+                await asyncio.gather(*(front.submit(r) for r in reqs))
+            finally:
+                await front.aclose()
+
+        asyncio.run(go())
+        assert server.registry.get("snn_async_queue_depth").value() == 0
+        assert server.registry.get("snn_async_submitted_total").value() == 5
