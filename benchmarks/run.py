@@ -31,9 +31,29 @@ def main() -> None:
     ap.add_argument("--profile", metavar="DIR", default=None,
                     help="capture a jax.profiler trace of the benches "
                          "into DIR")
+    ap.add_argument("--skip-analysis", action="store_true",
+                    help="skip the static-analysis pre-flight")
     args = ap.parse_args()
 
     import jax
+
+    if not args.skip_analysis:
+        # Pre-flight: trace-level invariants are seconds to check and a
+        # violated one (host callback in the scan, W*C recomputed per
+        # tick, retrace-per-call static) invalidates every number the
+        # benches below would spend minutes producing.
+        from repro.analysis import check as analysis_check
+
+        print("=== static-analysis pre-flight ===", flush=True)
+        report = analysis_check.run()
+        if not report.ok():
+            print(report.table(), file=sys.stderr)
+            print(report.summary(), file=sys.stderr)
+            print("analysis pre-flight failed: benchmark numbers would be "
+                  "meaningless; fix the findings (or --skip-analysis to "
+                  "measure anyway)", file=sys.stderr)
+            sys.exit(report.exit_code())
+        print(report.summary(), flush=True)
 
     from benchmarks import (
         bench_iris, bench_latency, bench_mnist, bench_serve, bench_snn_scale,

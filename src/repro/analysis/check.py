@@ -1,0 +1,134 @@
+"""The analysis gate: sweep every shipped program through every rule.
+
+Usage::
+
+    python -m repro.analysis.check --all            # the full shipped matrix
+    python -m repro.analysis.check --list           # what --all covers
+    python -m repro.analysis.check --program tick/event/frozen/notelem
+    python -m repro.analysis.check --all --include-info
+
+Exit status is nonzero iff any ``error``-severity finding fired, so the
+CI job is just ``python -m repro.analysis.check --all``.  Findings also
+mirror through the shared JSON-lines event log (``REPRO_EVENT_LOG=path``,
+see :mod:`repro.obs.log`) for machine consumption.
+
+Nothing here executes a tick: programs are traced (``jax.make_jaxpr``)
+and lowered (``.lower().as_text()``), kernels are linted from their
+launch descriptors, statics are hashed.  A full ``--all`` sweep runs in
+seconds on CPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+from typing import List, Optional, Sequence
+
+from repro.analysis import (hlo_rules, jaxpr_rules, pallas_rules, programs,
+                            static_rules)
+from repro.analysis.findings import ERROR, Finding, Report
+from repro.analysis.programs import Program
+
+
+def check_program(prog: Program, report: Report) -> None:
+    """Run every applicable rule family on one program."""
+    report.mark_checked(prog.name)
+    if prog.fn is not None:
+        cj = jaxpr_rules.closed_jaxpr_of(prog.fn, *prog.args)
+        report.extend(jaxpr_rules.check_hot_loop_purity(cj, prog.name))
+        report.extend(jaxpr_rules.check_dtype_discipline(
+            cj, prog.name, upcast_allowlist=prog.upcast_allowlist))
+        report.extend(jaxpr_rules.check_hoist(
+            cj, prog.name, n=prog.n, expect=prog.hoist))
+        if prog.check_hlo:
+            text = hlo_rules.lowered_text(prog.fn, *prog.args)
+            report.extend(hlo_rules.check_no_f64_text(text, prog.name))
+            report.extend(hlo_rules.check_no_host_calls_text(text, prog.name))
+    if prog.options_factory is not None:
+        report.extend(static_rules.check_hashable_static(
+            prog.options_factory(), prog.name, name="EngineOptions"))
+        report.extend(static_rules.check_hash_stability(
+            prog.options_factory, prog.name, name="EngineOptions"))
+    for launch in prog.launches:
+        report.extend(pallas_rules.check_launch(launch, prog.name))
+
+
+def check_static_surface(report: Report) -> None:
+    """The program-independent recompile-hazard surface: every kernel
+    entry point's declared static_argnames, and the admission-time
+    dispatch plan (which must stay UNhashable -- it carries arrays)."""
+    name = "static/jit-surface"
+    report.mark_checked(name)
+    for fn, statics in programs.jit_static_registry():
+        label = getattr(fn, "__name__", repr(fn))
+        report.extend(static_rules.check_static_argnames(
+            fn, statics, name, name=label))
+    plan_prog = "static/dispatch-plan"
+    report.mark_checked(plan_prog)
+    report.extend(static_rules.check_dispatch_plan(
+        programs.demo_dispatch_plan(), plan_prog))
+
+
+def run(names: Optional[Sequence[str]] = None, *,
+        include_static: bool = True) -> Report:
+    """Build + check the named programs (default: the full registry).
+    A program that fails to even build/trace is itself an error finding
+    (``analysis.build``) -- a rule that can't run must not pass silently.
+    """
+    report = Report()
+    for name in (names or programs.program_names()):
+        try:
+            prog = programs.build_program(name)
+            check_program(prog, report)
+        except Exception as e:  # noqa: BLE001 - reported as a finding
+            report.mark_checked(name)
+            report.add(Finding(
+                rule="analysis.build", severity=ERROR, program=name,
+                message=f"program failed to build/trace: "
+                        f"{type(e).__name__}: {e}"))
+            traceback.print_exc(file=sys.stderr)
+    if include_static:
+        check_static_surface(report)
+    return report
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="Static analysis gate over every shipped compiled "
+                    "program (jaxpr/HLO invariants + Pallas kernel lint).")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep the full program registry (default when "
+                         "no --program is given)")
+    ap.add_argument("--program", action="append", default=[],
+                    metavar="NAME", help="check one program (repeatable; "
+                    "see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registry and exit")
+    ap.add_argument("--include-info", action="store_true",
+                    help="show info-severity findings in the table")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in programs.program_names():
+            print(name)
+        print("static/jit-surface")
+        print("static/dispatch-plan")
+        return 0
+
+    names: Optional[List[str]] = args.program or None
+    if names:
+        known = set(programs.program_names())
+        bad = [n for n in names if n not in known]
+        if bad:
+            ap.error(f"unknown program(s) {bad}; see --list")
+    report = run(names, include_static=not names)
+    print(report.table(include_info=args.include_info))
+    report.emit_json()
+    print(report.summary())
+    return report.exit_code()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

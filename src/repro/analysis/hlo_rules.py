@@ -1,0 +1,155 @@
+"""Lowered-HLO (StableHLO text) rules.
+
+The jaxpr rules (:mod:`repro.analysis.jaxpr_rules`) are the primary
+gate -- typed IR, no regexes.  Two classes of hazard only become visible
+*after* lowering, so they get text-level checks here:
+
+* 64-bit types introduced by the lowering itself (``f64[``-style
+  leakage), and
+* host-callback ``custom_call`` targets that jax lowers callbacks into.
+
+This module also hosts the region-aware W*C multiply counter that
+``tests/test_engine.py`` pioneered (``while_spans`` /
+``wc_multiplies``) -- the test now imports it from here, so the analyzer
+and the test suite cannot drift apart.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, List, Tuple
+
+import jax
+
+from repro.analysis.findings import ERROR, Finding
+
+__all__ = [
+    "lowered_text", "normalize_module_text", "while_spans", "wc_multiplies",
+    "check_no_f64_text", "check_no_host_calls_text",
+]
+
+# custom_call targets that are fine in a pure device program.  Everything
+# else containing "callback"/"infeed"/"outfeed"/host-transfer markers is a
+# violation; unknown targets are reported too (fail closed -- a new jax
+# version introducing a new host-call target should trip the gate, not
+# slide through).
+_HOST_CALL_MARKERS = ("callback", "infeed", "outfeed", "send", "recv",
+                     "host")
+
+
+def lowered_text(fn: Callable, *args: Any, **kwargs: Any) -> str:
+    """StableHLO text of ``jit(fn)(*args)``, module name normalized so
+    two lowerings of the same program compare equal."""
+    txt = jax.jit(lambda *a: fn(*a, **kwargs)).lower(*args).as_text()
+    return normalize_module_text(txt)
+
+
+def normalize_module_text(text: str) -> str:
+    """Strip the one non-deterministic token (the module's auto-generated
+    name) so text-level comparisons are stable across processes."""
+    return re.sub(r"module @\S+", "module @m", text)
+
+
+# ---------------------------------------------------------------------------
+# Region-aware W*C counting (moved from tests/test_engine.py)
+# ---------------------------------------------------------------------------
+
+def _match_region(text: str, k: int) -> int:
+    """Return the end index of the brace region opening at ``text[k]``."""
+    depth = 0
+    for m in range(k, len(text)):
+        if text[m] == "{":
+            depth += 1
+        elif text[m] == "}":
+            depth -= 1
+            if depth == 0:
+                return m
+    return -1
+
+
+def while_spans(text: str) -> List[Tuple[int, int]]:
+    """(start, end) char spans of every ``stablehlo.while`` op's regions --
+    the ``cond`` region and the chained ``do`` region."""
+    spans = []
+    i = 0
+    while True:
+        j = text.find("stablehlo.while", i)
+        if j < 0:
+            break
+        k = text.find("{", j)
+        m = _match_region(text, k) if k >= 0 else -1
+        if m < 0:
+            break
+        spans.append((k, m))
+        i = m
+        if re.match(r"\s*do\s*\{", text[m + 1:]):
+            k2 = text.find("{", m + 1)
+            m2 = _match_region(text, k2)
+            if m2 > 0:
+                spans.append((k2, m2))
+                i = m2
+        i += 1
+    return spans
+
+
+def wc_multiplies(text: str, n: int) -> Tuple[int, int]:
+    """Count (n, n) elementwise multiplies: (executed-per-tick, hoisted).
+
+    JAX outlines scan bodies into private ``func.func``s called from the
+    ``while`` op's ``do`` region, so "inside the loop" means: textually
+    within a while region, OR within any function other than ``@main``
+    (the only callers of outlined private functions in these programs are
+    loop bodies).  Everything in ``@main`` outside a while region runs
+    once per rollout.
+    """
+    wc_shape = f"tensor<{n}x{n}xf32>"
+    spans = while_spans(text)
+    funcs = [(m.start(), m.group(1))
+             for m in re.finditer(r"func\.func\s+\w+\s+@([\w.\-$]+)", text)]
+    in_loop = out_of_loop = 0
+    for m in re.finditer(
+            r"stablehlo\.multiply.*" + re.escape(wc_shape), text):
+        o = m.start()
+        enclosing = "main"
+        for start, name in funcs:
+            if start < o:
+                enclosing = name
+            else:
+                break
+        if enclosing != "main" or any(a <= o <= b for a, b in spans):
+            in_loop += 1
+        else:
+            out_of_loop += 1
+    return in_loop, out_of_loop
+
+
+# ---------------------------------------------------------------------------
+# Text-level rules
+# ---------------------------------------------------------------------------
+
+def check_no_f64_text(text: str, program: str) -> List[Finding]:
+    """No 64-bit element types survive lowering (catches f64 the lowering
+    itself introduces, which a jaxpr walk cannot see)."""
+    out: List[Finding] = []
+    for token in ("f64[", "c128[", "tensor<f64", "xf64>", "xc128>"):
+        if token in text:
+            out.append(Finding(
+                rule="dtype.x64_lowered", severity=ERROR, program=program,
+                location=token,
+                message=f"64-bit element type `{token}` in lowered HLO"))
+            break
+    return out
+
+
+def check_no_host_calls_text(text: str, program: str) -> List[Finding]:
+    """No host-callback ``custom_call`` targets in the lowered program."""
+    out: List[Finding] = []
+    for m in re.finditer(r"custom_call\s*@?\"?([\w.\-$]+)", text):
+        target = m.group(1).lower()
+        if any(marker in target for marker in _HOST_CALL_MARKERS):
+            out.append(Finding(
+                rule="purity.host_custom_call", severity=ERROR,
+                program=program, location=m.group(1),
+                message=f"host-call custom_call target `{m.group(1)}` "
+                        f"in lowered program"))
+    return out

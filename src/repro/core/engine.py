@@ -52,13 +52,13 @@ the same pin.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.lif import lif_step
+from repro.deprecation import warn_deprecated
 from repro.core.network_types import SNNParams, SNNState  # noqa: F401 (re-export surface)
 
 _BACKENDS = ("jnp", "pallas", "pallas_fused", "event")
@@ -274,11 +274,10 @@ class TickEngine(EngineOptions):
                 f"unknown engine option(s) {sorted(unknown)}; valid names: "
                 f"{sorted(names)}")
         if legacy:
-            warnings.warn(
+            warn_deprecated(
                 "TickEngine(**per-call statics) is deprecated; build a "
                 "validated EngineOptions and pass TickEngine(options) "
-                "(the kwargs shim remains for one release)",
-                DeprecationWarning, stacklevel=2)
+                "(the kwargs shim remains for one release)")
         # Legacy shim: set fields WITHOUT the eager cross-field validation
         # (old callers relied on e.g. the event_knee/event_overflow clash
         # raising inside rollout, not at construction).
@@ -359,7 +358,11 @@ class TickEngine(EngineOptions):
             return self._tick_tail(carry, st, state2, w, reward,
                                    params, plastic_c, learn_until)
 
-        if wc is None:
+        if wc is None and (delays is not None or self.backend != "pallas"):
+            # Every remaining path consumes the premasked matrix -- except
+            # the unfused "pallas" uniform-delay tick, whose kernel masks
+            # per tile in VMEM; forming wc there would be a dead (n, n)
+            # multiply traced into every tick.
             wc = w * params.c.astype(w.dtype)
 
         slot = jnp.mod(st.tick, max_delay)

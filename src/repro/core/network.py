@@ -26,7 +26,6 @@ the TPU restatement of the paper's mux fabric (DESIGN.md §4).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -36,6 +35,7 @@ from repro.core.engine import (  # noqa: F401 (public API)
     EngineOptions, TickCarry, TickEngine,
 )
 from repro.core.lif import LIFParams
+from repro.deprecation import warn_deprecated
 from repro.core.network_types import (  # noqa: F401 (back-compat re-exports)
     SNNParams, SNNState, synaptic_input,
 )
@@ -299,13 +299,12 @@ def forward_layered(
         time_major = bool(
             spikes_in.ndim >= 2 and spikes_in.shape[0] == n_ticks and n_ticks > 1)
         if time_major:
-            warnings.warn(
+            warn_deprecated(
                 "forward_layered is inferring time_major=True from "
                 f"spikes_in.shape[0] == n_ticks == {n_ticks}; this heuristic "
                 "misfires when a batch dim equals n_ticks. Pass "
                 "time_major=True (spike train) or time_major=False "
-                "(clamped drive) explicitly.",
-                DeprecationWarning, stacklevel=2)
+                "(clamped drive) explicitly.")
     if time_major:
         if spikes_in.ndim < 2 or spikes_in.shape[0] != n_ticks:
             raise ValueError(

@@ -1,0 +1,30 @@
+"""Repro-originated deprecation warnings.
+
+Every deprecation shim in this codebase warns with
+:class:`ReproDeprecationWarning` (a :class:`DeprecationWarning` subclass,
+so ``pytest.warns(DeprecationWarning)`` in the dedicated shim tests keeps
+passing).  The subclass exists so the pytest ``filterwarnings`` config can
+turn *our* deprecations into errors without also erroring on third-party
+``DeprecationWarning`` noise from jax/numpy internals:
+
+    filterwarnings = ["error::repro.deprecation.ReproDeprecationWarning"]
+
+A shim site calls :func:`warn_deprecated` (stacklevel is relative to the
+shim, so the warning is attributed to the *caller* of the deprecated API).
+"""
+
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["ReproDeprecationWarning", "warn_deprecated"]
+
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """A deprecation originating from repro's own shims (not a dependency)."""
+
+
+def warn_deprecated(message: str, *, stacklevel: int = 2) -> None:
+    """Emit a :class:`ReproDeprecationWarning` attributed to the caller's
+    caller (default ``stacklevel=2`` == the code invoking the shim)."""
+    warnings.warn(message, ReproDeprecationWarning, stacklevel=stacklevel + 1)

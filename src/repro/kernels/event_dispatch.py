@@ -64,10 +64,124 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+import numpy as np
+
 from repro.kernels.compat import CompilerParams
+from repro.kernels.launch_spec import KernelLaunch, Operand, Scratch
 from repro.kernels.lif_step import _lif_epilogue
 
 DEFAULT_BLOCK_N = 128
+
+
+def _epilogue_operands(B: int, N: int, block_n: int, dtypes: dict,
+                       has_drive: bool, index_arity: int):
+    """The state/param/output operands every event variant shares.
+
+    ``index_arity`` is the number of grid axes the index maps take before
+    the scalar-prefetch operand(s) (grid kernel: 3, db kernel: 2)."""
+    bn = (1, block_n)
+    if index_arity == 3:
+        map_b = lambda b, j, k, s: (b, j)
+        map_p = lambda b, j, k, s: (0, j)
+    else:
+        map_b = lambda b, j, i, c: (b, j)
+        map_p = lambda b, j, i, c: (0, j)
+    state = [Operand("v", (B, N), dtypes["v"], bn, map_b),
+             Operand("r", (B, N), dtypes["r"], bn, map_b)]
+    if has_drive:
+        state.append(Operand("drive", (B, N), dtypes["drive"], bn, map_b))
+    params = [Operand(pname, (1, N), dtypes.get(pname, dtypes["param"]),
+                      bn, map_p)
+              for pname in ("v_th", "leak", "r_ref", "gain", "i_bias",
+                            "v_reset")]
+    outputs = [Operand("v_out", (B, N), dtypes["v"], bn, map_b),
+               Operand("r_out", (B, N), dtypes["r"], bn, map_b),
+               Operand("y_out", (B, N), dtypes["v"], bn, map_b)]
+    return state, params, outputs
+
+
+def event_launch(*, B: int, K: int, N: int, k_active: int, dtypes: dict,
+                 has_drive: bool,
+                 block_n: int = DEFAULT_BLOCK_N) -> KernelLaunch:
+    """Launch descriptor for the grid variant (:func:`event_lif_dispatch`).
+
+    ``K`` is the presynaptic row count *without* the sentinel; the weight
+    operand is (K+1, N) and the lint's prefetch example is an all-sentinel
+    spike list -- the worst-case row index the steered DMA can take.
+    """
+    # The scalar-prefetched spike list steers the DMA: only spiking rows'
+    # fan-out slices ever leave HBM.
+    w_op = Operand("w", (K + 1, N), dtypes["w"], (1, block_n),
+                   lambda b, j, k, s: (s[b, k], j))
+    state, params, outputs = _epilogue_operands(
+        B, N, block_n, dtypes, has_drive, index_arity=3)
+    idx_ex = np.full((B, k_active), K, np.int32)
+    return KernelLaunch(
+        name="event_dispatch",
+        grid=(B, N // block_n, k_active),
+        inputs=tuple([w_op] + state + params),
+        outputs=tuple(outputs),
+        scratch=(Scratch("vmem", (1, block_n), jnp.float32),),
+        num_scalar_prefetch=1,
+        prefetch_example=(idx_ex,),
+    )
+
+
+def db_dma_schedule(nb: int):
+    """The double-buffered DMA protocol of ``_event_db_kernel``, as a
+    concrete op list for ``nb`` live spikes.
+
+    This is the kernel's manual-DMA twin: the kernel's control flow is
+    traced (``pl.when`` + ``fori_loop``), so the analyzer cannot walk it
+    -- instead this function restates the exact same protocol in plain
+    Python (warmup start, prefetch-next start, wait, accumulate), and the
+    semaphore-pairing lint simulates it for every ``nb``.  If the kernel
+    protocol changes, change THIS function in the same commit -- the
+    parity comment in ``_event_db_kernel.body`` points back here.
+
+    Ops: ``("start", slot, k)`` begins spike ``k``'s copy into buffer
+    ``slot`` (signals semaphore ``slot``); ``("wait", slot, k)`` blocks
+    on semaphore ``slot``; ``("use", slot, k)`` reads buffer ``slot``
+    expecting spike ``k``'s data.
+    """
+    ops = []
+    if nb > 0:
+        ops.append(("start", 0, 0))          # warmup: spike 0 -> buffer 0
+    for k in range(nb):
+        slot = k % 2
+        if k + 1 < nb:
+            # Start spike k+1's DMA into the other buffer BEFORE waiting
+            # on spike k: the gather overlaps the accumulate.
+            ops.append(("start", 1 - slot, k + 1))
+        ops.append(("wait", slot, k))
+        ops.append(("use", slot, k))
+    return ops
+
+
+def event_db_launch(*, B: int, K: int, N: int, k_active: int, dtypes: dict,
+                    has_drive: bool,
+                    block_n: int = DEFAULT_BLOCK_N) -> KernelLaunch:
+    """Launch descriptor for the double-buffered compact-list variant
+    (:func:`event_lif_dispatch_db`).  The weight matrix stays in HBM
+    (``memory_space=ANY``); its gathers are manual DMAs described by
+    :func:`db_dma_schedule`."""
+    w_op = Operand("w", (K + 1, N), dtypes["w"], memory_space="any")
+    state, params, outputs = _epilogue_operands(
+        B, N, block_n, dtypes, has_drive, index_arity=2)
+    idx_ex = np.full((B, k_active), K, np.int32)
+    counts_ex = np.full((B,), k_active, np.int32)
+    return KernelLaunch(
+        name="event_dispatch_db",
+        grid=(B, N // block_n),
+        inputs=tuple([w_op] + state + params),
+        outputs=tuple(outputs),
+        scratch=(Scratch("vmem", (1, block_n), jnp.float32),
+                 Scratch("vmem", (2, 1, block_n), dtypes["w"]),
+                 Scratch("sem_dma", (2,))),
+        num_scalar_prefetch=2,
+        prefetch_example=(idx_ex, counts_ex),
+        dma_schedule=db_dma_schedule,
+    )
 
 
 def _event_kernel(
@@ -159,44 +273,28 @@ def event_lif_dispatch(
         raise ValueError(f"event dispatch supports fixed_leak|euler, got {mode!r}")
     has_drive = drive is not None
 
-    grid = (B, N // block_n, k_active)
-    # The scalar-prefetched spike list steers the DMA: only spiking rows'
-    # fan-out slices ever leave HBM.
-    w_spec = pl.BlockSpec((1, block_n), lambda b, j, k, s: (s[b, k], j))
-    bspec = pl.BlockSpec((1, block_n), lambda b, j, k, s: (b, j))
-    pspec = pl.BlockSpec((1, block_n), lambda b, j, k, s: (0, j))
-
-    in_specs = [w_spec, bspec, bspec]
-    inputs = [w, v, r]
-    if has_drive:
-        in_specs.append(bspec)
-        inputs.append(drive)
+    launch = event_launch(
+        B=B, K=w.shape[0] - 1, N=N, k_active=k_active,
+        dtypes={"w": w.dtype, "v": v.dtype, "r": r.dtype,
+                "drive": drive.dtype if has_drive else None,
+                "param": v_th.dtype},
+        has_drive=has_drive, block_n=block_n)
     row = lambda a: a.reshape(1, N)
-    in_specs += [pspec] * 6
-    inputs += [row(v_th), row(leak), row(r_ref), row(gain), row(i_bias),
-               row(v_reset)]
+    arrays = {"w": w, "v": v, "r": r, "drive": drive,
+              "v_th": row(v_th), "leak": row(leak), "r_ref": row(r_ref),
+              "gain": row(gain), "i_bias": row(i_bias),
+              "v_reset": row(v_reset)}
 
     kernel = functools.partial(_event_kernel, mode=mode, has_drive=has_drive)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=[bspec, bspec, bspec],
-        scratch_shapes=[pltpu.VMEM((1, block_n), jnp.float32)],
-    )
     return pl.pallas_call(
         kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((B, N), v.dtype),
-            jax.ShapeDtypeStruct((B, N), r.dtype),
-            jax.ShapeDtypeStruct((B, N), v.dtype),
-        ],
+        grid_spec=launch.grid_spec(),
+        out_shape=launch.out_shapes(),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(idx.astype(jnp.int32), *inputs)
+    )(idx.astype(jnp.int32), *launch.gather(arrays))
 
 
 def _event_db_kernel(
@@ -239,6 +337,9 @@ def _event_db_kernel(
     def _warmup():
         copy_k(0, 0).start()
 
+    # DMA protocol twin: db_dma_schedule() restates this exact
+    # start/wait/use order in plain Python for the semaphore-pairing
+    # lint -- change both together.
     def body(k, carry):
         slot = jax.lax.rem(k, 2)
 
@@ -317,44 +418,27 @@ def event_lif_dispatch_db(
         raise ValueError(f"counts must be shape ({B},), got {counts.shape}")
     has_drive = drive is not None
 
-    grid = (B, N // block_n)
-    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
-    bspec = pl.BlockSpec((1, block_n), lambda b, j, i, c: (b, j))
-    pspec = pl.BlockSpec((1, block_n), lambda b, j, i, c: (0, j))
-
-    in_specs = [any_spec, bspec, bspec]
-    inputs = [w, v, r]
-    if has_drive:
-        in_specs.append(bspec)
-        inputs.append(drive)
+    launch = event_db_launch(
+        B=B, K=w.shape[0] - 1, N=N, k_active=k_active,
+        dtypes={"w": w.dtype, "v": v.dtype, "r": r.dtype,
+                "drive": drive.dtype if has_drive else None,
+                "param": v_th.dtype},
+        has_drive=has_drive, block_n=block_n)
     row = lambda a: a.reshape(1, N)
-    in_specs += [pspec] * 6
-    inputs += [row(v_th), row(leak), row(r_ref), row(gain), row(i_bias),
-               row(v_reset)]
+    arrays = {"w": w, "v": v, "r": r, "drive": drive,
+              "v_th": row(v_th), "leak": row(leak), "r_ref": row(r_ref),
+              "gain": row(gain), "i_bias": row(i_bias),
+              "v_reset": row(v_reset)}
 
     kernel = functools.partial(_event_db_kernel, mode=mode,
                                has_drive=has_drive, block_n=block_n)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=[bspec, bspec, bspec],
-        scratch_shapes=[
-            pltpu.VMEM((1, block_n), jnp.float32),
-            pltpu.VMEM((2, 1, block_n), w.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
-    )
     return pl.pallas_call(
         kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((B, N), v.dtype),
-            jax.ShapeDtypeStruct((B, N), r.dtype),
-            jax.ShapeDtypeStruct((B, N), v.dtype),
-        ],
+        grid_spec=launch.grid_spec(),
+        out_shape=launch.out_shapes(),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(idx.astype(jnp.int32), counts.astype(jnp.int32), *inputs)
+    )(idx.astype(jnp.int32), counts.astype(jnp.int32),
+      *launch.gather(arrays))

@@ -28,13 +28,49 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.launch_spec import KernelLaunch, Operand, Scratch
 
 DEFAULT_BLOCK_B = 128
 DEFAULT_BLOCK_N = 128
 DEFAULT_BLOCK_K = 512
+
+
+def lif_launch(*, B: int, K: int, N: int, dtypes: dict,
+               block_b: int = DEFAULT_BLOCK_B,
+               block_n: int = DEFAULT_BLOCK_N,
+               block_k: int = DEFAULT_BLOCK_K) -> KernelLaunch:
+    """Launch descriptor for :func:`fused_lif_step` (see
+    :mod:`repro.kernels.launch_spec`).  ``dtypes`` maps ``s, w, c, v, r,
+    drive, param`` to dtypes (``drive`` always present: the entry point
+    substitutes a zeros placeholder when the caller passes None)."""
+    bn = ((block_b, block_n), lambda i, j, k: (i, j))
+    param = ((1, block_n), lambda i, j, k: (0, j))
+    kn = ((block_k, block_n), lambda i, j, k: (k, j))
+    inputs = [
+        Operand("s", (B, K), dtypes["s"], (block_b, block_k),
+                lambda i, j, k: (i, k)),
+        Operand("w", (K, N), dtypes["w"], *kn),
+        Operand("c", (K, N), dtypes["c"], *kn),
+        Operand("v", (B, N), dtypes["v"], *bn),
+        Operand("r", (B, N), dtypes["r"], *bn),
+        Operand("drive", (B, N), dtypes["drive"], *bn),
+    ]
+    inputs += [Operand(pname, (1, N), dtypes.get(pname, dtypes["param"]),
+                       *param)
+               for pname in ("v_th", "leak", "r_ref", "gain", "i_bias",
+                             "v_reset")]
+    outputs = (Operand("v_out", (B, N), dtypes["v"], *bn),
+               Operand("r_out", (B, N), dtypes["r"], *bn),
+               Operand("y_out", (B, N), dtypes["s"], *bn))
+    return KernelLaunch(
+        name="lif_step",
+        grid=(B // block_b, N // block_n, K // block_k),
+        inputs=tuple(inputs),
+        outputs=outputs,
+        scratch=(Scratch("vmem", (block_b, block_n), jnp.float32),),
+    )
 
 
 def _lif_epilogue(acc, v, r, drive, v_th, leak, r_ref, gain, i_bias, v_reset, mode):
@@ -133,46 +169,29 @@ def fused_lif_step(
         raise ValueError(
             f"shapes must be block-aligned: B={B}%{block_b}, N={N}%{block_n}, K={K}%{block_k}"
         )
-    grid = (B // block_b, N // block_n, K // block_k)
     has_drive = drive is not None
     if drive is None:
         drive = jnp.zeros((B, N), v.dtype)  # placeholder operand (unread)
 
     row = lambda a: a.reshape(1, N)
-    bspec_bn = pl.BlockSpec((block_b, block_n), lambda i, j, k: (i, j))
-    bspec_param = pl.BlockSpec((1, block_n), lambda i, j, k: (0, j))
+    launch = lif_launch(
+        B=B, K=K, N=N,
+        dtypes={"s": s.dtype, "w": w.dtype, "c": c.dtype, "v": v.dtype,
+                "r": r.dtype, "drive": drive.dtype, "param": v_th.dtype},
+        block_b=block_b, block_n=block_n, block_k=block_k)
 
     kernel = functools.partial(_fused_kernel, mode=mode, has_drive=has_drive)
     v_new, r_new, y = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),  # s
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),  # w
-            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),  # c
-            bspec_bn,  # v
-            bspec_bn,  # r
-            bspec_bn,  # drive
-            bspec_param,  # v_th
-            bspec_param,  # leak
-            bspec_param,  # r_ref
-            bspec_param,  # gain
-            bspec_param,  # i_bias
-            bspec_param,  # v_reset
-        ],
-        out_specs=[bspec_bn, bspec_bn, bspec_bn],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, N), v.dtype),
-            jax.ShapeDtypeStruct((B, N), r.dtype),
-            jax.ShapeDtypeStruct((B, N), s.dtype),
-        ],
-        scratch_shapes=[pltpu.VMEM((block_b, block_n), jnp.float32)],
+        grid_spec=launch.grid_spec(),
+        out_shape=launch.out_shapes(),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(
-        s, w, c, v, r, drive,
-        row(v_th), row(leak), row(r_ref), row(gain), row(i_bias), row(v_reset),
-    )
+    )(*launch.gather(
+        {"s": s, "w": w, "c": c, "v": v, "r": r, "drive": drive,
+         "v_th": row(v_th), "leak": row(leak), "r_ref": row(r_ref),
+         "gain": row(gain), "i_bias": row(i_bias),
+         "v_reset": row(v_reset)}))
     return v_new, r_new, y

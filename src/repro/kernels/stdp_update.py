@@ -49,13 +49,52 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.launch_spec import KernelLaunch, Operand, Scratch
 
 DEFAULT_BLOCK_B = 128
 DEFAULT_BLOCK_K = 128
 DEFAULT_BLOCK_N = 128
+
+
+def stdp_launch(*, B: int, K: int, N: int, dtypes: dict,
+                block_b: int = DEFAULT_BLOCK_B,
+                block_k: int = DEFAULT_BLOCK_K,
+                block_n: int = DEFAULT_BLOCK_N) -> KernelLaunch:
+    """Launch descriptor for :func:`fused_stdp_step` (see
+    :mod:`repro.kernels.launch_spec`): grid ``(K/bk, N/bn, B/bB)``, batch
+    innermost as the contraction axis of both outer products.  ``dtypes``
+    maps ``s_pre, x_pre, s_post, x_post, w, c, elig, reward`` to dtypes.
+    """
+    bk = ((block_b, block_k), lambda i, j, b: (b, i))
+    bn = ((block_b, block_n), lambda i, j, b: (b, j))
+    kn = ((block_k, block_n), lambda i, j, b: (i, j))
+    inputs = (
+        Operand("s_pre", (B, K), dtypes["s_pre"], *bk),
+        Operand("x_pre", (B, K), dtypes["x_pre"], *bk),
+        Operand("s_post", (B, N), dtypes["s_post"], *bn),
+        Operand("x_post", (B, N), dtypes["x_post"], *bn),
+        Operand("w", (K, N), dtypes["w"], *kn),
+        Operand("c", (K, N), dtypes["c"], *kn),
+        Operand("elig", (K, N), dtypes["elig"], *kn),
+        # R-STDP's dopamine scalar is runtime data: SMEM, not a constant.
+        Operand("reward", (1, 1), dtypes["reward"], (1, 1),
+                lambda i, j, b: (0, 0), memory_space="smem"),
+    )
+    outputs = (
+        Operand("w_out", (K, N), dtypes["w"], *kn),
+        Operand("elig_out", (K, N), dtypes["elig"], *kn),
+        Operand("x_pre_out", (B, K), dtypes["x_pre"], *bk),
+        Operand("x_post_out", (B, N), dtypes["x_post"], *bn),
+    )
+    return KernelLaunch(
+        name="stdp_update",
+        grid=(K // block_k, N // block_n, B // block_b),
+        inputs=inputs,
+        outputs=outputs,
+        scratch=(Scratch("vmem", (block_k, block_n), jnp.float32),),
+    )
 
 
 def _stdp_kernel(
@@ -170,11 +209,13 @@ def fused_stdp_step(
         raise ValueError(
             f"shapes must be block-aligned: B={B}%{block_b}, "
             f"K={K}%{block_k}, N={N}%{block_n}")
-    grid = (K // block_k, N // block_n, B // block_b)
-
-    bspec_bk = pl.BlockSpec((block_b, block_k), lambda i, j, b: (b, i))
-    bspec_bn = pl.BlockSpec((block_b, block_n), lambda i, j, b: (b, j))
-    bspec_kn = pl.BlockSpec((block_k, block_n), lambda i, j, b: (i, j))
+    launch = stdp_launch(
+        B=B, K=K, N=N,
+        dtypes={"s_pre": s_pre.dtype, "x_pre": x_pre.dtype,
+                "s_post": s_post.dtype, "x_post": x_post.dtype,
+                "w": w.dtype, "c": c.dtype, "elig": elig.dtype,
+                "reward": reward.dtype},
+        block_b=block_b, block_k=block_k, block_n=block_n)
 
     kernel = functools.partial(
         _stdp_kernel,
@@ -184,32 +225,14 @@ def fused_stdp_step(
     )
     w_new, elig_new, x_pre_new, x_post_new = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            bspec_bk,  # s_pre
-            bspec_bk,  # x_pre
-            bspec_bn,  # s_post
-            bspec_bn,  # x_post
-            bspec_kn,  # w
-            bspec_kn,  # c
-            bspec_kn,  # elig
-            pl.BlockSpec(
-                (1, 1), lambda i, j, b: (0, 0), memory_space=pltpu.SMEM),
-        ],
-        out_specs=[bspec_kn, bspec_kn, bspec_bk, bspec_bn],
-        out_shape=[
-            jax.ShapeDtypeStruct((K, N), w.dtype),
-            jax.ShapeDtypeStruct((K, N), elig.dtype),
-            jax.ShapeDtypeStruct((B, K), x_pre.dtype),
-            jax.ShapeDtypeStruct((B, N), x_post.dtype),
-        ],
-        scratch_shapes=[pltpu.VMEM((block_k, block_n), jnp.float32)],
+        grid_spec=launch.grid_spec(),
+        out_shape=launch.out_shapes(),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(
-        s_pre, x_pre, s_post, x_post, w, c, elig,
-        reward.reshape(1, 1),
-    )
+    )(*launch.gather(
+        {"s_pre": s_pre, "x_pre": x_pre, "s_post": s_post,
+         "x_post": x_post, "w": w, "c": c, "elig": elig,
+         "reward": reward.reshape(1, 1)}))
     return w_new, elig_new, x_pre_new, x_post_new

@@ -51,9 +51,11 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+import numpy as np
 
 from repro.kernels.compat import CompilerParams
+from repro.kernels.launch_spec import KernelLaunch, Operand, Scratch
 from repro.kernels.lif_step import _lif_epilogue
 
 DEFAULT_BLOCK_B = 128
@@ -154,6 +156,96 @@ def _tick_kernel(
                 y[:, None, :].astype(dly_out_ref.dtype))
 
 
+def tick_launch(
+    *,
+    B: int,
+    K: int,
+    N: int,
+    n_read: int,
+    dtypes: dict,
+    has_c: bool,
+    has_delays: bool,
+    has_drive: bool,
+    write_delay: bool,
+    n_full: int = 0,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> KernelLaunch:
+    """The whole-tick kernel's launch descriptor.
+
+    This is the single source of truth for the grid, the BlockSpecs, the
+    operand order (which must match ``_tick_kernel``'s ``refs``
+    iteration), and the VMEM scratch -- :func:`fused_tick` materializes a
+    ``pallas_call`` from it and :mod:`repro.analysis.pallas_rules` lints
+    it.  ``dtypes`` maps operand names (``dly_read, w, c, delays, v, r,
+    drive, dly_full, param``) to dtypes; ``n_full`` is the full delay
+    depth D when ``write_delay``.
+    """
+    grid = (B // block_b, N // block_n, K // block_k)
+    bn = (block_b, block_n)
+    kn = (block_k, block_n)
+    map_bn = lambda i, j, k, s: (i, j)
+    map_kn = lambda i, j, k, s: (k, j)
+    map_param = lambda i, j, k, s: (0, j)
+
+    if has_delays:
+        # Full history tile: every slot participates in the contraction.
+        read = Operand("dly_read", (B, n_read, K), dtypes["dly_read"],
+                       (block_b, n_read, block_k),
+                       lambda i, j, k, s: (i, 0, k))
+    else:
+        # The scalar-prefetched circular pointer steers the DMA: only the
+        # slot arriving this tick ever leaves HBM.
+        read = Operand("dly_read", (B, n_read, K), dtypes["dly_read"],
+                       (block_b, 1, block_k),
+                       lambda i, j, k, s: (i, s[0], k))
+
+    inputs = [read,
+              Operand("w", (K, N), dtypes["w"], kn, map_kn)]
+    if has_c:
+        inputs.append(Operand("c", (K, N), dtypes["c"], kn, map_kn))
+    if has_delays:
+        inputs.append(Operand("delays", (K, N), dtypes["delays"],
+                              kn, map_kn))
+    inputs += [Operand("v", (B, N), dtypes["v"], bn, map_bn),
+               Operand("r", (B, N), dtypes["r"], bn, map_bn)]
+    if has_drive:
+        inputs.append(Operand("drive", (B, N), dtypes["drive"],
+                              bn, map_bn))
+    if write_delay:
+        dly_bn = ((block_b, n_full, block_n),
+                  lambda i, j, k, s: (i, 0, j))
+        inputs.append(Operand("dly_full", (B, n_full, N),
+                              dtypes["dly_full"], *dly_bn))
+    param = (1, block_n)
+    for pname in ("v_th", "leak", "r_ref", "gain", "i_bias", "v_reset"):
+        inputs.append(Operand(pname, (1, N),
+                              dtypes.get(pname, dtypes["param"]),
+                              param, map_param))
+
+    outputs = [Operand("v_out", (B, N), dtypes["v"], bn, map_bn),
+               Operand("r_out", (B, N), dtypes["r"], bn, map_bn),
+               Operand("y_out", (B, N), dtypes["dly_read"], bn, map_bn)]
+    if write_delay:
+        outputs.append(Operand("dly_out", (B, n_full, N),
+                               dtypes["dly_full"], *dly_bn))
+
+    # Worst-case prefetch example for the lint: read slot at the deepest
+    # history index, write slot at the deepest buffer index.
+    slots_ex = np.array(
+        [n_read - 1, (n_full - 1) if write_delay else 0], np.int32)
+    return KernelLaunch(
+        name="tick_fused",
+        grid=grid,
+        inputs=tuple(inputs),
+        outputs=tuple(outputs),
+        scratch=(Scratch("vmem", (block_b, block_n), jnp.float32),),
+        num_scalar_prefetch=1,
+        prefetch_example=(slots_ex,),
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "block_b", "block_n", "block_k", "interpret"),
@@ -212,73 +304,38 @@ def fused_tick(
     write_delay = dly_full is not None
     n_delay = n_read
 
-    grid = (B // block_b, N // block_n, K // block_k)
-    bspec_bn = pl.BlockSpec((block_b, block_n), lambda i, j, k, s: (i, j))
-    bspec_kn = pl.BlockSpec((block_k, block_n), lambda i, j, k, s: (k, j))
-    bspec_param = pl.BlockSpec((1, block_n), lambda i, j, k, s: (0, j))
-
-    if has_delays:
-        # Full history tile: every slot participates in the contraction.
-        read_spec = pl.BlockSpec(
-            (block_b, n_read, block_k), lambda i, j, k, s: (i, 0, k))
-    else:
-        # The scalar-prefetched circular pointer steers the DMA: only the
-        # slot arriving this tick ever leaves HBM.
-        read_spec = pl.BlockSpec(
-            (block_b, 1, block_k), lambda i, j, k, s: (i, s[0], k))
-
-    in_specs = [read_spec, bspec_kn]
-    inputs = [dly_read, w]
-    if has_c:
-        in_specs.append(bspec_kn)
-        inputs.append(c)
-    if has_delays:
-        in_specs.append(bspec_kn)
-        inputs.append(delays)
-    in_specs += [bspec_bn, bspec_bn]
-    inputs += [v, r]
-    if has_drive:
-        in_specs.append(bspec_bn)
-        inputs.append(drive)
-    if write_delay:
-        D = dly_full.shape[1]
-        dly_bn = pl.BlockSpec((block_b, D, block_n), lambda i, j, k, s: (i, 0, j))
-        in_specs.append(dly_bn)
-        inputs.append(dly_full)
     row = lambda a: a.reshape(1, N)
-    in_specs += [bspec_param] * 6
-    inputs += [row(v_th), row(leak), row(r_ref), row(gain), row(i_bias),
-               row(v_reset)]
-
-    out_specs = [bspec_bn, bspec_bn, bspec_bn]
-    out_shape = [
-        jax.ShapeDtypeStruct((B, N), v.dtype),
-        jax.ShapeDtypeStruct((B, N), r.dtype),
-        jax.ShapeDtypeStruct((B, N), dly_read.dtype),
-    ]
-    if write_delay:
-        out_specs.append(dly_bn)
-        out_shape.append(jax.ShapeDtypeStruct(dly_full.shape, dly_full.dtype))
+    launch = tick_launch(
+        B=B, K=K, N=N, n_read=n_read,
+        dtypes={"dly_read": dly_read.dtype, "w": w.dtype,
+                "c": c.dtype if has_c else None,
+                "delays": delays.dtype if has_delays else None,
+                "v": v.dtype, "r": r.dtype,
+                "drive": drive.dtype if has_drive else None,
+                "dly_full": dly_full.dtype if write_delay else None,
+                "param": v_th.dtype},
+        has_c=has_c, has_delays=has_delays, has_drive=has_drive,
+        write_delay=write_delay,
+        n_full=dly_full.shape[1] if write_delay else 0,
+        block_b=block_b, block_n=block_n, block_k=block_k)
+    arrays = {"dly_read": dly_read, "w": w, "c": c, "delays": delays,
+              "v": v, "r": r, "drive": drive, "dly_full": dly_full,
+              "v_th": row(v_th), "leak": row(leak), "r_ref": row(r_ref),
+              "gain": row(gain), "i_bias": row(i_bias),
+              "v_reset": row(v_reset)}
 
     kernel = functools.partial(
         _tick_kernel, mode=mode, n_delay=n_delay, has_c=has_c,
         has_delays=has_delays, has_drive=has_drive, write_delay=write_delay)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        scratch_shapes=[pltpu.VMEM((block_b, block_n), jnp.float32)],
-    )
     out = pl.pallas_call(
         kernel,
-        grid_spec=grid_spec,
-        out_shape=out_shape,
+        grid_spec=launch.grid_spec(),
+        out_shape=launch.out_shapes(),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(slots.astype(jnp.int32), *inputs)
+    )(slots.astype(jnp.int32), *launch.gather(arrays))
     if write_delay:
         v_new, r_new, y, dly_new = out
         return v_new, r_new, y, dly_new

@@ -30,7 +30,6 @@ import argparse
 import dataclasses
 import functools
 import time
-import warnings
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
@@ -40,6 +39,7 @@ import numpy as np
 
 from repro.configs import get_bundle
 from repro.core.engine import EngineOptions
+from repro.deprecation import warn_deprecated
 from repro.models import model as M
 from repro.obs import MetricsRegistry, log_event, profile, span
 
@@ -122,10 +122,9 @@ class Request(ServeRequest):
 
     def __init__(self, rid, prompt=None, max_new=0, out=None,
                  t_submit=0.0, t_first=None, t_done=None):
-        warnings.warn(
+        warn_deprecated(
             "launch.serve.Request is deprecated; use ServeRequest "
-            "(same fields, shared with SNNServer)",
-            DeprecationWarning, stacklevel=2)
+            "(same fields, shared with SNNServer)")
         super().__init__(rid=rid, prompt=prompt, max_new=max_new,
                          t_submit=t_submit, t_first=t_first, t_done=t_done)
         if out is not None:
@@ -138,10 +137,9 @@ class SNNRequest(ServeRequest):
     def __init__(self, rid, tenant="", ext=None, n_ticks=0, rewards=None,
                  counts=None, pred=None, t_submit=0.0, t_first=None,
                  t_done=None):
-        warnings.warn(
+        warn_deprecated(
             "launch.serve.SNNRequest is deprecated; use ServeRequest "
-            "(same fields, shared with the LM WaveServer)",
-            DeprecationWarning, stacklevel=2)
+            "(same fields, shared with the LM WaveServer)")
         super().__init__(rid=rid, tenant=tenant, ext=ext, n_ticks=n_ticks,
                          rewards=rewards, counts=counts, pred=pred,
                          t_submit=t_submit, t_first=t_first, t_done=t_done)
@@ -1350,8 +1348,8 @@ def main(argv=None):
             prompt = rng.integers(0, cfg.vocab_size, (plen, cfg.n_codebooks))
         else:
             prompt = rng.integers(0, cfg.vocab_size, (plen,))
-        reqs.append(Request(rid=i, prompt=prompt.astype(np.int32),
-                            max_new=args.max_new))
+        reqs.append(ServeRequest(rid=i, prompt=prompt.astype(np.int32),
+                                 max_new=args.max_new))
     with profile(args.profile):
         stats = serve(cfg, params, reqs, slots=args.slots,
                       max_len=args.max_len)

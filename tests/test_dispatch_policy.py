@@ -27,7 +27,7 @@ from repro.core import connectivity, dispatch_policy
 from repro.core.dispatch_policy import (
     DispatchPlan, is_diagonal, knee_spikes, plan, resolve_k_active,
 )
-from repro.core.engine import TickEngine
+from repro.core.engine import EngineOptions, TickEngine
 from repro.core.lif import LIFParams
 from repro.core.network import SNNParams, SNNState, rollout
 
@@ -172,7 +172,7 @@ class TestPlan:
 
     def test_engine_kwargs_build_an_engine(self):
         p = plan(_ring(64, fan=4), w_in=np.eye(64))
-        eng = TickEngine(**p.engine_kwargs())
+        eng = TickEngine(EngineOptions(**p.engine_kwargs()))
         assert eng.backend == "event"
         assert eng.event_dispatch == p.strategy
         assert isinstance(p, DispatchPlan)
@@ -194,7 +194,7 @@ def _knee_engine(**kw):
     base = dict(backend="event", event_dispatch="topk", event_k_active=60,
                 event_knee=40, telemetry=True)
     base.update(kw)
-    return TickEngine(**base)
+    return TickEngine(EngineOptions(**base))
 
 
 class TestAdaptiveKnee:
@@ -229,12 +229,9 @@ class TestAdaptiveKnee:
         assert int(tel.policy_dense) == 1            # tick 2: 9 < m=10 <= 12
 
     def test_knee_requires_fallback_overflow(self):
-        p = _params(16, _ring(16))
-        st = SNNState.zeros((), 16)
-        eng = TickEngine(backend="event", event_dispatch="topk",
-                         event_knee=4, event_overflow="strict")
         with pytest.raises(ValueError, match="event_knee requires"):
-            eng.rollout(p, st, None, 2)
+            EngineOptions(backend="event", event_dispatch="topk",
+                          event_knee=4, event_overflow="strict")
 
 
 class TestKneeParity:
@@ -257,8 +254,8 @@ class TestKneeParity:
         n, ticks = p.w.shape[0], 6
         ext = jnp.asarray((rng.random((ticks, n)) < 0.9), jnp.float32)
         st = SNNState.zeros((), n)
-        eng = TickEngine(backend="event", event_dispatch="topk",
-                         event_k_active=64, event_knee=8)
+        eng = TickEngine(EngineOptions(backend="event", event_dispatch="topk",
+                         event_k_active=64, event_knee=8))
         _, got = eng.rollout(p, st, ext, ticks)
         _, want = rollout(p, SNNState.zeros((), n), ext, ticks, backend="jnp")
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
@@ -271,11 +268,11 @@ class TestKneeParity:
         n, ticks = p.w.shape[0], 6
         ext = jnp.asarray((rng.random((ticks, n)) < 0.02), jnp.float32)
         st = SNNState.zeros((), n)
-        eng = TickEngine(backend="event", event_dispatch="topk",
-                         event_k_active=64, event_knee=48)
+        eng = TickEngine(EngineOptions(backend="event", event_dispatch="topk",
+                         event_k_active=64, event_knee=48))
         _, got = eng.rollout(p, st, ext, ticks)
-        plain = TickEngine(backend="event", event_dispatch="topk",
-                           event_k_active=64)
+        plain = TickEngine(EngineOptions(backend="event", event_dispatch="topk",
+                           event_k_active=64))
         _, want = plain.rollout(p, SNNState.zeros((), n), ext, ticks)
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
@@ -289,8 +286,8 @@ class TestKneeParity:
         ext = jnp.asarray(
             (rng.random((ticks, n)) < rates[:, None]), jnp.float32)
         st = SNNState.zeros((), n)
-        eng = TickEngine(backend="event", event_dispatch="topk",
-                         event_k_active=64, event_knee=16, telemetry=True)
+        eng = TickEngine(EngineOptions(backend="event", event_dispatch="topk",
+                         event_k_active=64, event_knee=16, telemetry=True))
         _, got, tel = eng.rollout(p, st, ext, ticks)
         _, want = rollout(p, SNNState.zeros((), n), ext, ticks, backend="jnp")
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -306,9 +303,9 @@ class TestKneeParity:
         ext = jnp.asarray((rng.random((ticks, n)) < 0.3), jnp.float32)
         out = {}
         for ed in (False, True):
-            eng = TickEngine(backend="event", event_dispatch="topk",
+            eng = TickEngine(EngineOptions(backend="event", event_dispatch="topk",
                              event_k_active=64, event_knee=16,
-                             event_ext_diag=ed)
+                             event_ext_diag=ed))
             _, out[ed] = eng.rollout(p, SNNState.zeros((), n), ext, ticks)
         np.testing.assert_array_equal(np.asarray(out[True]),
                                       np.asarray(out[False]))
@@ -321,8 +318,8 @@ class TestKneeRecompilePin:
         compiled program."""
         rng, p = TestKneeParity()._case(seed=9)
         n, ticks = p.w.shape[0], 5
-        eng = TickEngine(backend="event", event_dispatch="topk",
-                         event_k_active=16, event_knee=8)
+        eng = TickEngine(EngineOptions(backend="event", event_dispatch="topk",
+                         event_k_active=16, event_knee=8))
         traces = {"n": 0}
 
         def run(params, state, ext):

@@ -18,7 +18,6 @@ Three pins:
   deliberately-unhoisted control proving the check has teeth.
 """
 import dataclasses
-import re
 import warnings
 
 import jax
@@ -27,7 +26,7 @@ import numpy as np
 import pytest
 
 from repro.core import connectivity
-from repro.core.engine import TickCarry, TickEngine
+from repro.core.engine import EngineOptions, TickCarry, TickEngine
 from repro.core.lif import LIFParams, lif_step
 from repro.core.network import (
     SNNParams, SNNState, forward_layered, learning_rollout, rollout,
@@ -313,7 +312,7 @@ class TestEventBackend:
         st0 = SNNState.zeros((), n)
         ext = _ext(n, ticks, (), p=0.9, seed=15)   # near-saturated drive
         fin_o, ras_o = _seed_rollout(p, st0, ext, ticks)
-        eng = TickEngine(backend="event", event_k_active=2)
+        eng = TickEngine(EngineOptions(backend="event", event_k_active=2))
         fin_e, ras_e = eng.rollout(p, st0, ext, ticks)
         assert float(np.asarray(ras_o).sum(-1).max()) > 2  # overflow happened
         np.testing.assert_array_equal(np.asarray(ras_o), np.asarray(ras_e))
@@ -333,7 +332,7 @@ class TestEventBackend:
         ext = _ext(n, ticks, (slots,), p=0.3, seed=17)
 
         def one(p, e):
-            eng = TickEngine(backend="event")
+            eng = TickEngine(EngineOptions(backend="event"))
             st0 = SNNState.zeros((), n)
             return eng.rollout(p, st0, e, ticks, neighbors=nbrs)[1]
 
@@ -479,75 +478,21 @@ class TestDelayRoundTrip:
 # ---------------------------------------------------------------------------
 
 _N_HLO = 9          # distinctive shape to grep for in the HLO
-_WC_SHAPE = f"tensor<{_N_HLO}x{_N_HLO}xf32>"
-
-
-def _match_region(text, k):
-    """Return the end index of the brace region opening at ``text[k]``."""
-    depth = 0
-    for m in range(k, len(text)):
-        if text[m] == "{":
-            depth += 1
-        elif text[m] == "}":
-            depth -= 1
-            if depth == 0:
-                return m
-    return -1
-
-
-def _while_spans(text):
-    """(start, end) char spans of every ``stablehlo.while`` op's regions --
-    the ``cond`` region and the chained ``do`` region."""
-    spans = []
-    i = 0
-    while True:
-        j = text.find("stablehlo.while", i)
-        if j < 0:
-            break
-        k = text.find("{", j)
-        m = _match_region(text, k) if k >= 0 else -1
-        if m < 0:
-            break
-        spans.append((k, m))
-        i = m
-        if re.match(r"\s*do\s*\{", text[m + 1:]):
-            k2 = text.find("{", m + 1)
-            m2 = _match_region(text, k2)
-            if m2 > 0:
-                spans.append((k2, m2))
-                i = m2
-        i += 1
-    return spans
 
 
 def _wc_multiplies(text):
-    """Count (N,N) elementwise multiplies: (executed-per-tick, hoisted).
+    """Region-aware (N,N) multiply counter, shared with the analyzer
+    (:mod:`repro.analysis.hlo_rules`) so this suite and the analysis gate
+    can never drift apart."""
+    from repro.analysis import hlo_rules
 
-    JAX outlines scan bodies into private ``func.func``s called from the
-    ``while`` op's ``do`` region, so "inside the loop" means: textually
-    within a while region, OR within any function other than ``@main``
-    (the only callers of outlined private functions in these fixtures are
-    loop bodies). Everything in ``@main`` outside a while region runs
-    once per rollout.
-    """
-    spans = _while_spans(text)
-    funcs = [(m.start(), m.group(1))
-             for m in re.finditer(r"func\.func\s+\w+\s+@([\w.\-$]+)", text)]
-    in_loop = out_of_loop = 0
-    for m in re.finditer(
-            r"stablehlo\.multiply.*" + re.escape(_WC_SHAPE), text):
-        o = m.start()
-        enclosing = "main"
-        for start, name in funcs:
-            if start < o:
-                enclosing = name
-            else:
-                break
-        if enclosing != "main" or any(a <= o <= b for a, b in spans):
-            in_loop += 1
-        else:
-            out_of_loop += 1
-    return in_loop, out_of_loop
+    return hlo_rules.wc_multiplies(text, _N_HLO)
+
+
+def _while_spans(text):
+    from repro.analysis import hlo_rules
+
+    return hlo_rules.while_spans(text)
 
 
 class TestMaskHoisting:

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.engine import TickEngine
+from repro.core.engine import EngineOptions, TickEngine
 from repro.core.lif import LIFParams, lif_step
 from repro.core.network import (
     SNNParams, SNNState, learning_rollout, rollout,
@@ -176,7 +176,8 @@ class TestEventOverflowTelemetry:
         st0 = SNNState.zeros((), self.N)
         ext = _ext(self.N, self.T, p=0.8, seed=9, mag=2.0)
         _, r_ref = rollout(p, st0, ext, self.T, backend="jnp")
-        eng = TickEngine(backend="event", event_k_active=2, telemetry=True)
+        eng = TickEngine(EngineOptions(backend="event", event_k_active=2,
+                                       telemetry=True))
         _, r_ev, tel = eng.rollout(p, st0, ext, self.T)
         np.testing.assert_array_equal(np.asarray(r_ref), np.asarray(r_ev))
         assert np.asarray(r_ref).sum() > 2 * self.T, "drive too cold"
@@ -190,7 +191,8 @@ class TestEventOverflowTelemetry:
         st0 = SNNState.zeros((), self.N)
         ext = _ext(self.N, self.T, p=0.8, seed=9, mag=2.0)
         fan_in = EventFanIn.from_dense(np.asarray(p.c))
-        eng = TickEngine(backend="event", event_k_active=2, telemetry=True)
+        eng = TickEngine(EngineOptions(backend="event", event_k_active=2,
+                                       telemetry=True))
         _, r_ev, tel = eng.rollout(p, st0, ext, self.T, neighbors=fan_in)
         _, r_ref = rollout(p, st0, ext, self.T, backend="jnp")
         np.testing.assert_allclose(np.asarray(r_ref), np.asarray(r_ev))
@@ -198,7 +200,16 @@ class TestEventOverflowTelemetry:
 
 
 class TestHLOIdentity:
-    """telemetry=False lowers byte-identical to the pre-observability scan."""
+    """telemetry=False ships the pre-observability program.
+
+    Primary pin (structural, via :mod:`repro.analysis`): hoisted W*C,
+    pure hot loop, no 64-bit types, no host calls -- the invariants the
+    old byte-identity assertion was standing in for, asserted directly so
+    the pin survives harmless lowering churn across jax versions.  ONE
+    byte-compare against the inlined oracle remains as a canary; if it
+    fails while the structural pin stays green, the lowering drifted
+    cosmetically -- re-derive the oracle, don't add more byte pins.
+    """
 
     N, T, D = 16, 8, 4
 
@@ -242,13 +253,43 @@ class TestHLOIdentity:
         txt = jax.jit(fn).lower(*args).as_text()
         return re.sub(r"module @\S+", "module @m", txt)
 
-    def test_telemetry_off_is_byte_identical_to_oracle(self):
+    def _engine_off(self, p, st, ext):
+        return rollout(p, st, ext, self.T, backend="jnp")
+
+    def _engine_on(self, p, st, ext):
+        return rollout(p, st, ext, self.T, backend="jnp", telemetry=True)
+
+    def _assert_structurally_clean(self, fn, p, st0, ext, tag):
+        from repro.analysis import hlo_rules, jaxpr_rules
+
+        cj = jaxpr_rules.closed_jaxpr_of(fn, p, st0, ext)
+        assert jaxpr_rules.check_hot_loop_purity(cj, tag) == []
+        assert jaxpr_rules.check_dtype_discipline(cj, tag) == []
+        assert jaxpr_rules.check_hoist(
+            cj, tag, n=self.N, expect=jaxpr_rules.HOIST_HOISTED) == []
+        text = hlo_rules.lowered_text(fn, p, st0, ext)
+        assert hlo_rules.check_no_f64_text(text, tag) == []
+        assert hlo_rules.check_no_host_calls_text(text, tag) == []
+        # Region-aware HLO count agrees with the jaxpr-level contract:
+        # exactly one hoisted W*C product, zero per-tick ones.
+        assert hlo_rules.wc_multiplies(text, self.N) == (0, 1)
+
+    def test_telemetry_off_structural_pin(self):
         p, st0, ext = self._args()
+        self._assert_structurally_clean(
+            self._engine_off, p, st0, ext, "obs/telemetry-off")
 
-        def engine_off(p, st, ext):
-            return rollout(p, st, ext, self.T, backend="jnp")
+    def test_telemetry_on_passes_the_same_structural_pin(self):
+        """Telemetry adds carry leaves and reductions -- not impurity, not
+        a hoist regression (false-positive resistance for the analyzer)."""
+        p, st0, ext = self._args()
+        self._assert_structurally_clean(
+            self._engine_on, p, st0, ext, "obs/telemetry-on")
 
-        assert self._lowered(engine_off, p, st0, ext) \
+    def test_canary_telemetry_off_is_byte_identical_to_oracle(self):
+        # The one remaining byte-compare (see class docstring).
+        p, st0, ext = self._args()
+        assert self._lowered(self._engine_off, p, st0, ext) \
             == self._lowered(self._oracle, p, st0, ext)
 
     def test_teeth_telemetry_on_perturbs_the_lowering(self):
@@ -467,10 +508,10 @@ class TestServeObservability:
         assert stats["mean_ttft_s"] == 0.0
 
     def test_unknown_tenant_rejected_not_keyerror(self):
-        from repro.launch.serve import SNNRequest
+        from repro.launch.serve import ServeRequest
 
         server = self._server()
-        bad = SNNRequest(rid=0, tenant="ghost",
+        bad = ServeRequest(rid=0, tenant="ghost",
                          ext=np.zeros((4, 4), np.float32), n_ticks=4)
         stats = server.serve([bad])
         assert stats["requests_served"] == 0

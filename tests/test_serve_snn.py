@@ -17,7 +17,7 @@ from repro.core.lif import LIFParams
 from repro.core.network import SNNParams, SNNState, rollout
 from repro.core.registers import RegisterBank, WeightLayout
 from repro.launch.serve import (
-    SNNRequest, SNNServer, make_demo_requests, make_demo_tenants,
+    ServeRequest, SNNServer, make_demo_requests, make_demo_tenants,
 )
 
 jax.config.update("jax_platform_name", "cpu")
@@ -95,7 +95,7 @@ class TestOneProgramManyTenants:
         bank.set_weights(w)
         bank.set_thresholds(np.full((n_in + n_out,), 50, np.uint8))
         server.add_tenant("biased", bank, n_in=n_in, n_out=n_out)
-        req = SNNRequest(rid=0, tenant="biased",
+        req = ServeRequest(rid=0, tenant="biased",
                          ext=_drive(8, n_in, seed=1), n_ticks=8)
         server.serve([req])
         assert req.pred == 1
@@ -106,8 +106,8 @@ class TestOneProgramManyTenants:
         bank = _layered_bank(4, 2, seed=3)
         server.add_tenant("t", bank, n_in=4, n_out=2)
         ext = _drive(10, 4, seed=4)
-        full = SNNRequest(rid=0, tenant="t", ext=ext, n_ticks=10)
-        short = SNNRequest(rid=1, tenant="t", ext=ext, n_ticks=3)
+        full = ServeRequest(rid=0, tenant="t", ext=ext, n_ticks=10)
+        short = ServeRequest(rid=1, tenant="t", ext=ext, n_ticks=3)
         server.serve([full, short])
         assert server.compiles == 1
         assert short.counts.sum() <= full.counts.sum()
@@ -161,7 +161,7 @@ class TestEventTenancy:
         reqs = []
         for i, name in enumerate(["s0", "d0", "s1", "d0", "s0"]):
             t = server.tenants[name]
-            reqs.append(SNNRequest(rid=i, tenant=name,
+            reqs.append(ServeRequest(rid=i, tenant=name,
                                    ext=_drive(6, t.n_in, seed=30 + i),
                                    n_ticks=6))
         stats = server.serve(reqs)
@@ -170,7 +170,7 @@ class TestEventTenancy:
         assert stats["compiles"] == 2          # one per resident program
         assert stats["recompiles_after_warmup"] == 0
         # a second mixed queue stays warm on both programs
-        stats2 = server.serve([SNNRequest(
+        stats2 = server.serve([ServeRequest(
             rid=9, tenant=name, ext=_drive(5, server.tenants[name].n_in,
                                            seed=40), n_ticks=5)
             for name in ("s1", "d0")])
@@ -183,7 +183,7 @@ class TestEventTenancy:
         server = _server(slots=2, max_ticks=8, event_density=0.2)
         server.add_tenant("s", self._sparse_bank(N_MAX, seed=26),
                           n_in=N_MAX, n_out=N_MAX)
-        req = SNNRequest(rid=0, tenant="s", ext=_drive(8, N_MAX, seed=27),
+        req = ServeRequest(rid=0, tenant="s", ext=_drive(8, N_MAX, seed=27),
                          n_ticks=8)
         server.serve([req])
         t = server.tenants["s"]
@@ -226,8 +226,8 @@ class TestPlasticTenancy:
         ext = _drive(10, 4, p=0.7, seed=8)
         for wave in range(3):
             server.serve([
-                SNNRequest(rid=0, tenant="frozen", ext=ext, n_ticks=10),
-                SNNRequest(rid=1, tenant="plastic", ext=ext, n_ticks=10),
+                ServeRequest(rid=0, tenant="frozen", ext=ext, n_ticks=10),
+                ServeRequest(rid=1, tenant="plastic", ext=ext, n_ticks=10),
             ])
         w_frozen1 = np.asarray(server.tenants["frozen"].params.w)
         w_plastic1 = np.asarray(server.tenants["plastic"].params.w)
@@ -252,11 +252,11 @@ class TestPlasticTenancy:
         e1, e2 = _drive(8, 4, p=0.7, seed=13), _drive(8, 4, p=0.7, seed=14)
         together = build()
         together.serve([
-            SNNRequest(rid=0, tenant="p", ext=e1, n_ticks=8),
-            SNNRequest(rid=1, tenant="p", ext=e2, n_ticks=8)])
+            ServeRequest(rid=0, tenant="p", ext=e1, n_ticks=8),
+            ServeRequest(rid=1, tenant="p", ext=e2, n_ticks=8)])
         sequential = build()
-        sequential.serve([SNNRequest(rid=0, tenant="p", ext=e1, n_ticks=8)])
-        sequential.serve([SNNRequest(rid=1, tenant="p", ext=e2, n_ticks=8)])
+        sequential.serve([ServeRequest(rid=0, tenant="p", ext=e1, n_ticks=8)])
+        sequential.serve([ServeRequest(rid=1, tenant="p", ext=e2, n_ticks=8)])
         np.testing.assert_array_equal(
             np.asarray(together.tenants["p"].params.w),
             np.asarray(sequential.tenants["p"].params.w))
@@ -270,7 +270,7 @@ class TestPlasticTenancy:
             server = _server(slots=2, max_ticks=max_ticks)
             server.add_tenant("p", _layered_bank(4, 4, seed=16), n_in=4,
                               n_out=4, plastic=True)
-            server.serve([SNNRequest(rid=0, tenant="p", ext=ext, n_ticks=6)])
+            server.serve([ServeRequest(rid=0, tenant="p", ext=ext, n_ticks=6)])
             return np.asarray(server.tenants["p"].params.w)
 
         np.testing.assert_array_equal(learned_w(6), learned_w(12))
@@ -286,7 +286,7 @@ class TestPlasticTenancy:
         """Every request names an unknown tenant: zero report, counted
         rejections, no KeyError mid-wave."""
         server = _server()
-        bad = [SNNRequest(rid=i, tenant=f"ghost-{i}",
+        bad = [ServeRequest(rid=i, tenant=f"ghost-{i}",
                           ext=np.zeros((4, 4), np.float32), n_ticks=4)
                for i in range(3)]
         stats = server.serve(bad)
@@ -314,7 +314,7 @@ class TestPlasticTenancy:
         w0 = np.asarray(t.params.w).copy()
         c = np.asarray(t.params.c)
         ext = _drive(10, 4, p=0.8, seed=10)
-        server.serve([SNNRequest(rid=0, tenant="p", ext=ext, n_ticks=10)])
+        server.serve([ServeRequest(rid=0, tenant="p", ext=ext, n_ticks=10)])
         w1 = np.asarray(server.tenants["p"].params.w)
         np.testing.assert_array_equal(w0[c == 0], w1[c == 0])
 

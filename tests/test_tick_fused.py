@@ -28,7 +28,7 @@ import numpy as np
 import pytest
 
 from repro.core import connectivity
-from repro.core.engine import TickCarry, TickEngine
+from repro.core.engine import EngineOptions, TickCarry, TickEngine
 from repro.core.lif import LIFParams
 from repro.core.network import (
     SNNParams, SNNState, learning_rollout, rollout,
@@ -159,7 +159,7 @@ class TestFusedParity:
     def test_surrogate_rejected(self):
         n = 4
         p = _params(n, connectivity.ring(n))
-        eng = TickEngine(backend="pallas_fused", surrogate=True)
+        eng = TickEngine(EngineOptions(backend="pallas_fused", surrogate=True))
         with pytest.raises(ValueError, match="inference-only"):
             eng.tick(SNNState.zeros((), n), p, None)
 
@@ -171,7 +171,7 @@ class TestFusedRecompilePin:
         runtime scalar (scalar prefetch), never a compiled constant."""
         n, max_delay = 8, 3
         p = _params(n, connectivity.sparse_random(n, 0.5, seed=4), v_th=0.7)
-        eng = TickEngine(backend="pallas_fused")
+        eng = TickEngine(EngineOptions(backend="pallas_fused"))
         traces = {"n": 0}
 
         def tick(state, params, ext):
