@@ -262,6 +262,165 @@ def _sparse_sweep(fast: bool = True) -> Dict:
     return out
 
 
+def _bench_sharded_point(n: int, mesh, *, n_ticks: int, batch: int,
+                         reps: int, n_in: int = 256) -> Tuple[Dict, np.ndarray]:
+    """Time a (possibly mesh-sharded) frozen jnp rollout at one fabric
+    size.  ``mesh=None`` runs the plain single-device engine -- the
+    weak-scaling baseline and the parity reference.
+
+    The fabric is the implicit all-to-all (``c=None``): at 64k the
+    ``(n, n)`` f32 weights are 16 GiB and the mask would be a second 16
+    GiB that never needs to exist.  Weights come from
+    :func:`~repro.parallel.snn_sharding.make_sharded_dyadic_weights`
+    (column-block seeded, so sharded and unsharded runs see the
+    identical global matrix -- and the dyadic grid keeps every
+    reduction order exact, so parity is gated bitwise here too)."""
+    from repro.core.engine import EngineOptions, TickEngine
+    from repro.core.lif import LIFParams
+    from repro.core.network import SNNParams, SNNState
+    from repro.parallel import snn_sharding
+
+    engine = TickEngine(EngineOptions(backend="jnp", mesh=mesh))
+    w = snn_sharding.make_sharded_dyadic_weights(n, mesh)
+    rng = np.random.default_rng(11)
+    w_in = jnp.asarray(
+        rng.integers(0, 8, (n_in, n)).astype(np.float32) * 0.25)
+    params = SNNParams(w=w, c=None, w_in=w_in,
+                       lif=LIFParams.make(n, v_th=1.0, leak=0.1, r_ref=1))
+    if mesh is not None:
+        rules = snn_sharding.snn_rules(mesh)
+        params = snn_sharding.place(
+            params, snn_sharding.params_specs(rules, params), mesh)
+    state = SNNState.zeros((batch,), n)
+    ext = jnp.asarray(
+        (np.random.default_rng(13).random((n_ticks, batch, n_in)) < 0.1),
+        jnp.float32)
+
+    traces = {"n": 0}
+
+    def fn(p, st, e):
+        traces["n"] += 1
+        return engine.rollout(p, st, e, n_ticks)
+
+    jfn = jax.jit(fn)
+    final, raster = jfn(params, state, ext)          # warmup == the 1 compile
+    jax.block_until_ready(raster)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _, raster = jfn(params, state, ext)
+        jax.block_until_ready(raster)
+    wall = time.perf_counter() - t0
+    # Resuming from an advanced carry (the chunked-serving hand-off) must
+    # hit the cache -- shapes and statics are identical.
+    _, raster_off = jfn(params, final, ext)
+    jax.block_until_ready(raster_off)
+    metrics = {
+        "ticks_per_s": round(n_ticks * reps / max(1e-9, wall), 3),
+        "wall_s_per_rollout": round(wall / reps, 4),
+        "recompiles": traces["n"] - 1,
+    }
+    return metrics, np.asarray(raster)
+
+
+def _sharded_section(fast: bool = True, n_dev: int = 8) -> Dict:
+    """The configs/snn_64k.py operating point: the fabric partitioned by
+    destination columns over a simulated ``n_dev``-device mesh
+    (DESIGN.md §15).
+
+    Per n this measures the 8-device sharded rollout (ticks/s, per-device
+    synaptic throughput, recompiles == 0) against a single-device run at
+    ``n_base ~= n / sqrt(D)`` -- same per-device memory and per-device
+    work, so the **weak-scaling efficiency**
+
+        eff = (n^2 * tps_sharded) / (n_base^2 * tps_base)
+
+    is the fraction of aggregate synaptic throughput the partition
+    retains after paying the per-tick spike all_gather.  On real meshes
+    each device is its own chip; on the CI host every simulated device
+    shares one CPU, so eff ~= 1.0 there and the committed 0.6 floor
+    catches structural regressions (a weight operand slipping into the
+    per-tick exchange tanks it).  ``sharded_n16384_weak_scaling_
+    efficiency`` is gated as a policy floor in check_regression.py.
+
+    Fast mode stops at n=16384 (1 GiB of weights -- hosted-runner safe);
+    the full run adds the 65536 headline (16 GiB, 2 GiB/device).
+    """
+    from repro.launch.mesh import make_snn_mesh
+
+    if len(jax.devices()) < n_dev:
+        raise RuntimeError(
+            f"sharded section needs {n_dev} devices, jax sees "
+            f"{len(jax.devices())}; call repro.util.env."
+            f"ensure_host_device_count({n_dev}) before jax initializes")
+    mesh = make_snn_mesh(n_dev)
+    ns = (16384,) if fast else (16384, 65536)
+    # batch=4: wide enough that BLAS efficiency is comparable between
+    # the sharded (n, n/D) and baseline (n_base, n_base) GEMM shapes --
+    # at batch<=2 the matvec-shaped sharded product measures memory
+    # subsystem quirks, not the partition.
+    n_ticks, batch, reps = 8, 4, 2
+    out: Dict = {
+        "sharded_devices": n_dev,
+        "sharded_ns": list(ns),
+        "sharded_n_ticks": n_ticks,
+        "sharded_batch": batch,
+    }
+    for n in ns:
+        # Same per-device footprint as the sharded run: n_base^2 ~= n^2/D
+        # synapses on one device (rounded to the weight-gen block grid).
+        n_base = int(round(n / np.sqrt(n_dev) / 8) * 8)
+        tag = f"sharded_n{n}_d{n_dev}"
+        m, raster = _bench_sharded_point(
+            n, mesh, n_ticks=n_ticks, batch=batch, reps=reps)
+        out[f"{tag}_ticks_per_s"] = m["ticks_per_s"]
+        out[f"{tag}_wall_s_per_rollout"] = m["wall_s_per_rollout"]
+        out[f"{tag}_recompiles"] = m["recompiles"]
+        out[f"{tag}_synops_per_device_per_s"] = round(
+            m["ticks_per_s"] * batch * n * n / n_dev, 1)
+        mb, _ = _bench_sharded_point(
+            n_base, None, n_ticks=n_ticks, batch=batch, reps=reps)
+        out[f"sharded_n{n}_base{n_base}_ticks_per_s"] = mb["ticks_per_s"]
+        out[f"sharded_n{n}_weak_scaling_efficiency"] = round(
+            (n * n * m["ticks_per_s"])
+            / (n_base * n_base * mb["ticks_per_s"]), 3)
+        if n <= 16384:
+            # Bitwise parity vs the plain single-device engine at the
+            # same n (weights are block-seeded, so both arms see the
+            # identical fabric).  Skipped at 65536: the reference run
+            # would need its own 16 GiB replica.
+            m1, raster1 = _bench_sharded_point(
+                n, None, n_ticks=n_ticks, batch=batch, reps=1)
+            out[f"sharded_n{n}_exact"] = bool(
+                np.array_equal(raster, raster1))
+            assert out[f"sharded_n{n}_exact"], (
+                f"sharded rollout diverged from single-device at n={n}")
+        assert m["recompiles"] == 0, f"sharded rollout retraced at n={n}"
+        assert out[f"sharded_n{n}_weak_scaling_efficiency"] > 0, (
+            "weak-scaling efficiency must be positive")
+    return out
+
+
+def sharded_table(res: Dict) -> str:
+    """Markdown weak-scaling table (what the multi-device CI leg posts
+    to the step summary)."""
+    d = res["sharded_devices"]
+    rows = ["| n | devices | ticks/s | synops/s/device | n_base "
+            "| base ticks/s | weak-scaling eff |",
+            "|---|---------|---------|-----------------|--------"
+            "|--------------|------------------|"]
+    for n in res["sharded_ns"]:
+        base = [k for k in res
+                if k.startswith(f"sharded_n{n}_base") and
+                k.endswith("_ticks_per_s")]
+        n_base = base[0].split("_base")[1].split("_")[0] if base else "?"
+        rows.append(
+            f"| {n} | {d} | {res[f'sharded_n{n}_d{d}_ticks_per_s']} "
+            f"| {res[f'sharded_n{n}_d{d}_synops_per_device_per_s']:.3g} "
+            f"| {n_base} | {res[base[0]] if base else '?'} "
+            f"| {res[f'sharded_n{n}_weak_scaling_efficiency']} |")
+    return "\n".join(rows)
+
+
 def _telemetry_overhead(reps: int = 9) -> Dict:
     """The observability layer's CI gate: telemetry-on ticks/s must stay
     within 10% of telemetry-off at the gate point (n=1024, jnp backend
@@ -377,6 +536,7 @@ def run(fast: bool = True, ns: Optional[Tuple[int, ...]] = None) -> Dict:
                 f"{backend} retraced at n={n}")
 
     out.update(_sparse_sweep(fast=fast))
+    out.update(_sharded_section(fast=fast))
     out.update(_telemetry_overhead(reps=(9 if fast else 15)))
 
     # -- paper Table I cost model (kept from the seed bench) ---------------
@@ -412,11 +572,21 @@ def main(argv=None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smoke sizes only (what CPU CI runs)")
+    ap.add_argument("--sharded-only", action="store_true",
+                    help="run only the mesh-sharded section (the "
+                         "multi-device CI leg)")
     ap.add_argument("--out", default="BENCH_snn_scale.json")
     args = ap.parse_args(argv)
-    res = run(fast=args.fast)
+    # Must run before jax initializes a backend: the sharded section
+    # needs an 8-device (simulated, on CPU) mesh.
+    from repro.util.env import ensure_host_device_count
+    ensure_host_device_count(8)
+    res = _sharded_section(fast=args.fast) if args.sharded_only else run(
+        fast=args.fast)
     for k, v in res.items():
         print(f"{k}: {v}")
+    if "sharded_devices" in res:
+        print("\n" + sharded_table(res))
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

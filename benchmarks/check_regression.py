@@ -69,8 +69,14 @@ def _is_exact_key(k: str) -> bool:
 
 
 def _is_ratio_key(k: str) -> bool:
-    """Policy-floor keys: gated as hard floors, preserved by --refresh."""
-    return k.endswith("_on_off_ratio") or "_win_vs_" in k
+    """Policy-floor keys: gated as hard floors, preserved by --refresh.
+
+    ``*_efficiency`` covers the sharded weak-scaling floor
+    (``sharded_n*_weak_scaling_efficiency`` >= 0.6): aggregate synaptic
+    throughput the mesh partition must retain vs a single device doing
+    the same per-device work."""
+    return (k.endswith("_on_off_ratio") or "_win_vs_" in k
+            or k.endswith("_efficiency"))
 
 
 def _is_latency_key(k: str) -> bool:

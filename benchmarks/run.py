@@ -35,6 +35,12 @@ def main() -> None:
                     help="skip the static-analysis pre-flight")
     args = ap.parse_args()
 
+    # Before anything initializes a jax backend: the snn_scale sharded
+    # section (and the analysis sweep's mesh programs) want a simulated
+    # multi-device view of the CPU host.
+    from repro.util.env import ensure_host_device_count
+    ensure_host_device_count(8)
+
     import jax
 
     if not args.skip_analysis:

@@ -26,7 +26,7 @@ import traceback
 from typing import List, Optional, Sequence
 
 from repro.analysis import (hlo_rules, jaxpr_rules, pallas_rules, programs,
-                            static_rules)
+                            sharding_rules, static_rules)
 from repro.analysis.findings import ERROR, Finding, Report
 from repro.analysis.programs import Program
 
@@ -41,6 +41,8 @@ def check_program(prog: Program, report: Report) -> None:
             cj, prog.name, upcast_allowlist=prog.upcast_allowlist))
         report.extend(jaxpr_rules.check_hoist(
             cj, prog.name, n=prog.n, expect=prog.hoist))
+        report.extend(sharding_rules.check_no_w_gather_in_loop(
+            cj, prog.name, n=prog.n))
         if prog.check_hlo:
             text = hlo_rules.lowered_text(prog.fn, *prog.args)
             report.extend(hlo_rules.check_no_f64_text(text, prog.name))

@@ -135,6 +135,57 @@ def _tick_program(backend: str, learning: bool, telemetry: bool) -> Program:
     )
 
 
+def _sharded_options(learning: bool, telemetry: bool):
+    """EngineOptions with a 1-device ``("model",)`` mesh: the analysis
+    sweep runs wherever CI lands (usually one visible device), and the
+    sharded program structure -- shard_map around the scan, spec trees,
+    the spike collective plumbing -- is identical at any axis size; only
+    the gather width changes.  Meshes compare by device assignment, so
+    the factory stays hash-stable across calls (rule d)."""
+    from repro.core.engine import EngineOptions
+    from repro.launch.mesh import make_snn_mesh
+    from repro.plasticity import PlasticityParams
+
+    kw: dict = dict(backend="jnp", telemetry=telemetry,
+                    mesh=make_snn_mesh(1))
+    if learning:
+        kw["plasticity"] = PlasticityParams.make(
+            "stdp", a_plus=0.05, a_minus=0.05)
+    return EngineOptions(**kw)
+
+
+def _tick_sharded_program(learning: bool, telemetry: bool) -> Program:
+    from repro.core.engine import TickEngine
+    from repro.core.network import SNNState
+
+    engine = TickEngine(_sharded_options(learning, telemetry))
+    params = _snn_params(_N)
+    state = SNNState.zeros((), _N)
+    ext = _ext_seq(_N, _TICKS)
+    if learning:
+        from repro.plasticity import PlasticityState
+
+        pst = PlasticityState.zeros((), _N)
+        fn = functools.partial(engine.learning_rollout, n_ticks=_TICKS)
+        args = (params, state, pst, ext)
+    else:
+        fn = functools.partial(engine.rollout, n_ticks=_TICKS)
+        args = (params, state, ext)
+    tag = "learning" if learning else "frozen"
+    tel = "telem" if telemetry else "notelem"
+    # shard_map is not a loop primitive: the frozen premask hoists to
+    # just inside the partition, which the hoist walk still sees as
+    # outside every scan body -- HOIST_HOISTED holds sharded too.
+    return Program(
+        name=f"tick/sharded/{tag}/{tel}",
+        fn=fn, args=args, n=_N,
+        hoist=(jaxpr_rules.HOIST_IN_LOOP if learning
+               else jaxpr_rules.HOIST_HOISTED),
+        options_factory=functools.partial(
+            _sharded_options, learning, telemetry),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Serve programs (wave / chunk / refill)
 # ---------------------------------------------------------------------------
@@ -321,6 +372,7 @@ def program_names() -> Tuple[str, ...]:
              for b in BACKENDS
              for t in ("frozen", "learning")
              for tel in ("notelem", "telem")]
+    names += ["tick/sharded/frozen/notelem", "tick/sharded/learning/telem"]
     names += ["serve/wave/jnp", "serve/wave/event", "serve/chunk/jnp",
               "serve/refill/jnp"]
     names += [f"kernel/{reg}" for reg, _ in kernel_launches()]
@@ -333,6 +385,8 @@ def build_program(name: str) -> Program:
     parts = name.split("/")
     if parts[0] == "tick":
         _, backend, tag, tel = parts
+        if backend == "sharded":
+            return _tick_sharded_program(tag == "learning", tel == "telem")
         return _tick_program(backend, tag == "learning", tel == "telem")
     if name == "serve/wave/jnp":
         return _serve_wave_program(False)

@@ -1,0 +1,73 @@
+"""Sharding rules: no fabric-sized collective inside the hot loop.
+
+The sharded engine's contract (DESIGN.md §15) is ONE collective per
+tick, and it moves *spikes* -- ``B*n`` floats, about ``n``-fold smaller
+than any weight operand.  The failure mode this rule guards is the easy
+regression: a spec change (or an XLA repartition) that makes the tick
+loop ``all_gather`` the weight matrix itself, turning the
+communication-light column partition into a per-tick replication of 16
+GiB at the 64k operating point.
+
+The check is structural, on the jaxpr: any collective equation whose
+OUTPUT is at least ``n x n`` elements, sitting inside a ``scan``/
+``while`` body, is an error.  The legitimate spike gather passes by
+construction (its output is ``(..., n)``); hoisted weight movement
+outside the loop (e.g. the one-time premask placement) also passes --
+it runs once per rollout, not once per tick.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List
+
+from repro.analysis.findings import ERROR, Finding
+from repro.analysis.jaxpr_rules import iter_eqns
+
+__all__ = ["COLLECTIVE_PRIMS", "check_no_w_gather_in_loop"]
+
+# Jaxpr primitive names that move data across mesh shards.  (`psum` is
+# the all-reduce primitive's jaxpr name; `all_gather_invariant` is the
+# shard_map-era variant of all_gather.)
+COLLECTIVE_PRIMS = frozenset({
+    "all_gather", "all_gather_invariant", "all_to_all", "psum",
+    "psum_invariant", "reduce_scatter", "ppermute",
+})
+
+
+def _out_numel(eqn: Any) -> int:
+    best = 0
+    for v in eqn.outvars:
+        shape = getattr(getattr(v, "aval", None), "shape", None)
+        if shape is None:
+            continue
+        numel = 1
+        for d in shape:
+            try:
+                numel *= int(d)
+            except TypeError:   # symbolic dim; treat as 1
+                pass
+        best = max(best, numel)
+    return best
+
+
+def check_no_w_gather_in_loop(cj: Any, program: str, *,
+                              n: int) -> List[Finding]:
+    """ERROR on any collective inside a scan/while body whose output is
+    ``>= n*n`` elements -- the weight operand (or something its size)
+    being replicated per tick."""
+    out: List[Finding] = []
+    threshold = n * n
+    for site in iter_eqns(cj, recurse_pallas=False):
+        if site.name not in COLLECTIVE_PRIMS or not site.in_loop:
+            continue
+        numel = _out_numel(site.eqn)
+        if numel >= threshold:
+            out.append(Finding(
+                rule="sharding.w_gather_in_loop", severity=ERROR,
+                program=program, location=site.path,
+                message=f"collective `{site.name}` inside a loop body "
+                        f"moves {numel} elements (>= n*n = {threshold}): "
+                        f"the weight operand is being replicated per "
+                        f"tick; only the (B, n) spike exchange belongs "
+                        f"in the tick loop"))
+    return out

@@ -26,10 +26,29 @@ __all__ = [
 _ATOMS = (str, int, float, bool, bytes, type(None))
 
 
+def _mesh_types() -> tuple:
+    """jax's own static-intended mesh types (version-tolerant)."""
+    try:
+        from jax.sharding import Mesh
+    except ImportError:     # pragma: no cover - ancient jax
+        return ()
+    try:
+        from jax.sharding import AbstractMesh
+        return (Mesh, AbstractMesh)
+    except ImportError:
+        return (Mesh,)
+
+
 def is_deeply_immutable(value: Any) -> bool:
     """True when ``value`` is built purely from immutable parts (the only
     things safe to use as jit statics)."""
     if isinstance(value, _ATOMS) or isinstance(value, enum.Enum):
+        return True
+    if isinstance(value, _mesh_types()):
+        # jax.sharding.Mesh is jax's own jit-static currency: hashable,
+        # ==/hash keyed on (device assignment, axis names), and nothing
+        # user-reachable mutates one after construction.  EngineOptions
+        # carries one for the sharded engine (DESIGN.md §15).
         return True
     if isinstance(value, (tuple, frozenset)):
         return all(is_deeply_immutable(v) for v in value)

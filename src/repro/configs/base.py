@@ -62,6 +62,9 @@ class ModelConfig:
     snn_chunk_ticks: int = 8         # continuous-admission chunk size (ticks
                                      # per scheduler round; smaller = lower
                                      # TTFT, larger = fewer host/device syncs)
+    snn_mesh: int = 0                # devices to shard the fabric over
+                                     # (destination columns, DESIGN.md §15);
+                                     # 0 = single-device engine
     # numerics
     dtype: str = "bfloat16"
     # provenance

@@ -1,9 +1,13 @@
 """Production-scale SNN core: 65,536 neurons, all-to-all fabric.
 
 The paper's architecture scaled to the point where the synapse matrix
-(64k x 64k = 4.3G synapses) must shard across the mesh -- the
-"universal interconnect" as a distributed system (DESIGN.md §4). Used by
-the SNN scaling benchmark and the optional SNN dry-run cell.
+(64k x 64k = 4.3G synapses, 16 GiB in f32) must shard across the mesh --
+the "universal interconnect" as a distributed system (DESIGN.md §15).
+``snn_mesh=8`` partitions the fabric by destination columns over an
+8-device ``("model",)`` mesh (2 GiB of weights per device); the implicit
+all-to-all (``c=None``) means no second mask matrix ever exists.  Used
+by the SNN scaling benchmark's sharded section and runnable from the
+serve CLI (``python -m repro.launch.serve --arch snn-64k --smoke``).
 """
 from repro.configs import register
 from repro.configs.base import ArchBundle, ModelConfig, ParallelConfig
@@ -15,6 +19,7 @@ FULL = ModelConfig(
     layer_sizes=(),        # free-form all-to-all, not layered
     n_ticks=8,
     snn_mode="fixed_leak",
+    snn_mesh=8,            # shard the fabric over 8 devices (DESIGN.md §15)
     dtype="float32",
     source="DESIGN.md §4 scale-up of paper §II.D",
 )
@@ -26,6 +31,7 @@ SMOKE = ModelConfig(
     layer_sizes=(),
     n_ticks=8,
     snn_mode="fixed_leak",
+    snn_mesh=2,            # exercise the sharded path at smoke scale
     head_pad=1,
     dtype="float32",
 )

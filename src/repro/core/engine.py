@@ -161,6 +161,19 @@ class EngineOptions:
         folds its reductions in (see the module docstring). When False
         (default) the lowered HLO is byte-identical to the
         pre-observability engine.
+      mesh: optional :class:`jax.sharding.Mesh`; when set, ``scan()``
+        (and everything funneling through it: rollout, learning_rollout,
+        chunk) runs under ``shard_map`` with the fabric partitioned by
+        destination columns across ``shard_axis`` -- see
+        :mod:`repro.parallel.snn_sharding` and DESIGN.md §15.  Hashable
+        (meshes compare by device assignment), so the options stay a
+        jit-safe static.
+      shard_axis: mesh axis name to shard over (None -> the mesh's first
+        axis).  Set *without* ``mesh`` it marks the engine as running
+        INSIDE a ``shard_map`` body (the tick body then all-gathers the
+        arriving spikes along this axis) -- that is how
+        ``snn_sharding.sharded_scan`` builds its inner engine; user code
+        sets ``mesh`` and leaves the inner form alone.
     """
 
     mode: str = "fixed_leak"
@@ -175,6 +188,8 @@ class EngineOptions:
     event_hysteresis: float = 0.75
     event_ext_diag: bool = False
     telemetry: bool = False
+    mesh: Optional[Any] = None
+    shard_axis: Optional[str] = None
 
     def __post_init__(self):
         self.validate()
@@ -217,6 +232,59 @@ class EngineOptions:
             raise ValueError(
                 "event_hysteresis is a release *fraction* of the knee and "
                 f"must lie in (0, 1], got {self.event_hysteresis}")
+        if self.mesh is not None:
+            from jax.sharding import Mesh
+
+            if not isinstance(self.mesh, Mesh):
+                raise ValueError(
+                    f"mesh must be a jax.sharding.Mesh, got {type(self.mesh)}")
+            names = tuple(self.mesh.axis_names)
+            axis = self.shard_axis if self.shard_axis is not None else names[0]
+            if axis not in names:
+                raise ValueError(
+                    f"shard_axis {axis!r} is not a mesh axis (axes: {names})")
+        if self.sharded and self.event_ext_diag:
+            raise ValueError(
+                "event_ext_diag is unavailable on the sharded path: each "
+                "shard holds a rectangular (n_in, n/D) slice of w_in whose "
+                "jnp.diagonal is NOT the diagonal drive; the full "
+                "ext @ w_in product is rectangular-safe, use that")
+
+    @property
+    def sharded(self) -> bool:
+        """True when this engine partitions (or runs inside a partition
+        of) the fabric -- outer ``mesh`` or inner ``shard_axis`` form."""
+        return self.mesh is not None or self.shard_axis is not None
+
+    def resolved_shard_axis(self) -> Optional[str]:
+        """The mesh axis the fabric shards over (None when unsharded)."""
+        if self.shard_axis is not None:
+            return self.shard_axis
+        if self.mesh is not None:
+            return tuple(self.mesh.axis_names)[0]
+        return None
+
+    def effective_backend(self) -> str:
+        """The backend the tick body actually dispatches to.
+
+        Sharded ``"pallas_fused"`` remaps to ``"pallas"``: the whole-tick
+        megakernel couples the delay-ring width to the state width inside
+        one ``pallas_call`` and so cannot span the per-tick spike
+        all-gather; the unfused pallas arm (fused synaptic-matmul+LIF,
+        ring managed outside) composes with the collective unchanged.
+
+        Exactness of the remap: on the frozen path weights live on the
+        dyadic u8-grid, every f32 reduction order is exact, and the two
+        arms are bitwise identical (pinned in tests/test_snn_sharding).
+        Learning pushes weights off the grid, so the remapped arm agrees
+        with single-device ``"pallas"`` learning bitwise and with the
+        megakernel only to the ulp -- the documented contract for
+        sharded ``pallas_fused`` learning.  (A 1-device mesh skips the
+        remap entirely and stays bitwise with the megakernel: see
+        :func:`repro.parallel.snn_sharding.sharded_scan`.)"""
+        if self.sharded and self.backend == "pallas_fused":
+            return "pallas"
+        return self.backend
 
     def _event_strategy(self, neighbors: Optional[Any]) -> str:
         """Resolve ``event_dispatch`` against what the call provided."""
@@ -293,8 +361,15 @@ class TickEngine(EngineOptions):
     # -- the single tick body ---------------------------------------------
 
     def masked_weights(self, params: SNNParams, w: Optional[jax.Array] = None) -> jax.Array:
-        """``W*C``: the mux fabric's effective matrix."""
+        """``W*C``: the mux fabric's effective matrix.
+
+        ``c=None`` means the implicit all-to-all (every mux closed): the
+        effective matrix IS ``w``, and no second ``(n, n)`` buffer is ever
+        materialized -- the memory-math escape hatch for the 64k fabric
+        (DESIGN.md §15)."""
         w = params.w if w is None else w
+        if params.c is None:
+            return w
         return w * params.c.astype(w.dtype)
 
     def tick_body(
@@ -336,10 +411,20 @@ class TickEngine(EngineOptions):
         st = carry.state
         learning = carry.w is not None
         w = carry.w if learning else params.w
+        backend = self.effective_backend()
+        # Inner-shard form (set by snn_sharding.sharded_scan): this tick
+        # body runs inside shard_map on (n, n/D) operands and must gather
+        # the arriving spikes before the fan-in product.
+        shard_axis = self.shard_axis if self.mesh is None else None
+        if params.c is None and backend in ("pallas", "pallas_fused"):
+            raise ValueError(
+                "c=None (implicit all-to-all) needs the jnp or event "
+                "backend: the Pallas kernels stream c as an explicit "
+                "operand and mask per tile")
 
         max_delay = st.delay_buf.shape[-2]
 
-        if self.backend == "pallas_fused":
+        if backend == "pallas_fused":
             # -- whole-tick megakernel: delay read, masked accumulation, LIF
             #    update and delay write in ONE pallas_call; the circular
             #    pointers ride in as scalar prefetch (no retrace per tick).
@@ -358,12 +443,12 @@ class TickEngine(EngineOptions):
             return self._tick_tail(carry, st, state2, w, reward,
                                    params, plastic_c, learn_until)
 
-        if wc is None and (delays is not None or self.backend != "pallas"):
+        if wc is None and (delays is not None or backend != "pallas"):
             # Every remaining path consumes the premasked matrix -- except
             # the unfused "pallas" uniform-delay tick, whose kernel masks
             # per tile in VMEM; forming wc there would be a dead (n, n)
             # multiply traced into every tick.
-            wc = w * params.c.astype(w.dtype)
+            wc = w if params.c is None else w * params.c.astype(w.dtype)
 
         slot = jnp.mod(st.tick, max_delay)
         overflow_inc = None
@@ -375,8 +460,25 @@ class TickEngine(EngineOptions):
             arriving = jax.lax.dynamic_index_in_dim(
                 st.delay_buf, slot, axis=-2, keepdims=False
             ) if max_delay > 1 else st.lif.y
+            if shard_axis is not None:
+                # -- cross-shard spike exchange: THE one collective per
+                #    tick. Gathering the (B, n/D) local arriving spikes
+                #    into the full (B, n) presynaptic vector lets every
+                #    shard reduce its output columns over the complete
+                #    fan-in locally, in the single-device order -- which
+                #    is what keeps the sharded rollout bit-exact (a psum
+                #    of partial fan-ins would re-associate the f32 sum).
+                #    tiled=True concatenates shard blocks in axis order,
+                #    exactly the global column layout.  The gather sits
+                #    BEFORE the event knee's lax.cond, so both arms (and
+                #    every shard's branch decision) see identical data
+                #    and no collective ever hides inside a branch.
+                with jax.named_scope("tick/spike_all_gather"):
+                    arriving = jax.lax.all_gather(
+                        arriving, shard_axis,
+                        axis=arriving.ndim - 1, tiled=True)
             # -- synaptic input + LIF step: THE backend dispatch point.
-            if self.backend == "pallas":
+            if backend == "pallas":
                 from repro.kernels import ops  # local import; CPU tests use jnp
 
                 with jax.named_scope("tick/pallas"):
@@ -384,7 +486,7 @@ class TickEngine(EngineOptions):
                     lif_state = ops.fused_lif_step(
                         st.lif, arriving, p, ext,
                         mode=self.mode, surrogate=self.surrogate)
-            elif self.backend == "event":
+            elif backend == "event":
                 # -- event-driven dispatch: only spiking neurons' fan-outs
                 #    are gathered (the mux fabric routes nothing for silent
                 #    neurons). ``wc`` is the hoisted matrix on the frozen
@@ -522,14 +624,21 @@ class TickEngine(EngineOptions):
         else:
             delay_buf = st.delay_buf
         state2 = SNNState(lif=lif_state, delay_buf=delay_buf, tick=st.tick + 1)
+        # Sharded learning: the presynaptic events are the GATHERED full-
+        # width arriving spikes (with max_delay == 1 they are exactly the
+        # gathered previous-tick emissions), so the plasticity hook sees
+        # the same (.., n) x (.., n/D) operands on every shard and its
+        # x_pre trace stays replicated by construction.
+        s_pre = arriving if (shard_axis is not None and delays is None) else None
         return self._tick_tail(carry, st, state2, w, reward,
                                params, plastic_c, learn_until,
                                overflow_inc=overflow_inc,
-                               policy=policy_out, policy_inc=policy_inc)
+                               policy=policy_out, policy_inc=policy_inc,
+                               s_pre=s_pre)
 
     def _tick_tail(
         self, carry, st, state2, w, reward, params, plastic_c, learn_until,
-        overflow_inc=None, policy=None, policy_inc=None,
+        overflow_inc=None, policy=None, policy_inc=None, s_pre=None,
     ) -> Tuple[TickCarry, jax.Array]:
         """Shared tick tail: optionally run the plasticity datapath, fold
         telemetry, and rebuild the carry.
@@ -539,6 +648,12 @@ class TickEngine(EngineOptions):
         *outside* the tick kernel (including for ``backend="pallas_fused"``):
         learning is its own fused pass over ``(w, elig, traces)``, a disjoint
         working set from the tick's ``(v, r, delay line)``.
+
+        The default presynaptic events are ``st.lif.y`` (the previous
+        tick's emissions; exact for ``max_delay == 1``, which learning
+        requires); the sharded tick body overrides ``s_pre`` with the
+        gathered full-width arriving spikes so plasticity sees the whole
+        presynaptic axis against its local postsynaptic columns.
         """
         learning = carry.w is not None
         lif_state = state2.lif
@@ -558,7 +673,8 @@ class TickEngine(EngineOptions):
                 pb = "jnp"     # STDP outer products are dense; no event pass
             with jax.named_scope("tick/plasticity"):
                 pst2, w2 = plasticity_rules.plasticity_step(
-                    carry.plast, st.lif.y, lif_state.y, w,
+                    carry.plast, st.lif.y if s_pre is None else s_pre,
+                    lif_state.y, w,
                     params.c if plastic_c is None else plastic_c,
                     self.plasticity, reward, backend=pb)
             if learn_until is not None:
@@ -582,6 +698,25 @@ class TickEngine(EngineOptions):
 
     # -- scan driver -------------------------------------------------------
 
+    def _seed_carry(self, carry0: TickCarry, neighbors: Optional[Any]) -> TickCarry:
+        """Seed the optional carry slots (telemetry accumulator, knee
+        hysteresis bit) the engine's statics call for.  Shared by the
+        single-device scan and the sharded wrapper (which seeds on the
+        GLOBAL side so its spec trees see the final carry structure)."""
+        if self.telemetry and carry0.telem is None:
+            from repro.obs.telemetry import TickTelemetry
+
+            carry0 = dataclasses.replace(
+                carry0,
+                telem=TickTelemetry.zeros(carry0.state.lif.v.shape[:-1]))
+        if (self.backend == "event" and self.event_knee is not None
+                and carry0.policy is None
+                and self._event_strategy(neighbors) == "topk"):
+            # Seed the hysteresis bit (start in the spike-list arm).
+            carry0 = dataclasses.replace(
+                carry0, policy=jnp.zeros((), jnp.bool_))
+        return carry0
+
     def scan(
         self,
         params: SNNParams,
@@ -602,22 +737,24 @@ class TickEngine(EngineOptions):
         learning carries re-derive it per tick from the carried weights.
         With ``telemetry=True`` a zeroed accumulator is seeded into the
         carry when the caller didn't provide one.
-        """
-        if self.telemetry and carry0.telem is None:
-            from repro.obs.telemetry import TickTelemetry
 
-            carry0 = dataclasses.replace(
-                carry0,
-                telem=TickTelemetry.zeros(carry0.state.lif.v.shape[:-1]))
-        if (self.backend == "event" and self.event_knee is not None
-                and carry0.policy is None
-                and self._event_strategy(neighbors) == "topk"):
-            # Seed the hysteresis bit (start in the spike-list arm).
-            carry0 = dataclasses.replace(
-                carry0, policy=jnp.zeros((), jnp.bool_))
+        With ``mesh`` set this whole method runs under ``shard_map``
+        instead (:func:`repro.parallel.snn_sharding.sharded_scan`): one
+        compiled program, the hoist and the scan INSIDE the partition,
+        so the frozen path still materializes its (local) ``W*C`` slab
+        exactly once per rollout.
+        """
+        if self.mesh is not None:
+            from repro.parallel import snn_sharding
+
+            return snn_sharding.sharded_scan(
+                self, params, carry0, ext_seq, n_ticks, rewards=rewards,
+                delays=delays, plastic_c=plastic_c,
+                learn_until=learn_until, neighbors=neighbors)
+        carry0 = self._seed_carry(carry0, neighbors)
         learning = carry0.w is not None
         wc = None
-        if not learning and self.backend != "pallas":
+        if not learning and self.effective_backend() != "pallas":
             # Loop-invariant: materialized ONCE per rollout, a scan constant.
             # For "pallas_fused" this pre-masked matrix is the kernel's single
             # weight operand (no per-tile mask multiply, no c traffic).
@@ -651,6 +788,11 @@ class TickEngine(EngineOptions):
         neighbors: Optional[Any] = None,
     ) -> SNNState:
         """One frozen-weight tick (the public ``network.step`` semantics)."""
+        if self.mesh is not None:
+            raise ValueError(
+                "tick() is single-device; the sharded engine runs through "
+                "scan()/rollout()/chunk() (shard_map wraps the whole scan, "
+                "so a 1-tick chunk() is the sharded single tick)")
         carry, _ = self.tick_body(TickCarry(state=state), (ext, None),
                                   params=params, delays=delays,
                                   neighbors=neighbors)
@@ -705,6 +847,11 @@ class TickEngine(EngineOptions):
         if rewards is None:
             rewards = jnp.zeros((n_ticks,), jnp.float32)
         if plastic_c is None:
+            if params.c is None:
+                raise ValueError(
+                    "learning with c=None (implicit all-to-all) needs an "
+                    "explicit plastic_c mask (pass jnp.ones((n, n)) to "
+                    "learn every synapse)")
             plastic_c = params.c
         carry0 = TickCarry(state=state, plast=plast_state, w=params.w)
         final, raster = self.scan(params, carry0, ext_seq, n_ticks,
@@ -758,6 +905,10 @@ class TickEngine(EngineOptions):
         if rewards is None and carry.w is not None:
             rewards = jnp.zeros((n_ticks,), jnp.float32)
         if plastic_c is None and carry.w is not None:
+            if params.c is None:
+                raise ValueError(
+                    "learning chunk with c=None needs an explicit "
+                    "plastic_c mask (see learning_rollout)")
             plastic_c = params.c
         return self.scan(params, carry, ext_seq, n_ticks,
                          rewards=rewards, plastic_c=plastic_c,

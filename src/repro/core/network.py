@@ -16,12 +16,15 @@ here is a thin wrapper that builds an engine and threads the right carry
 through it. Rasters are bit-identical to the pre-engine implementations
 (pinned in tests/test_engine.py against inlined oracles).
 
-Distribution: ``batch`` shards over ``("pod","data")`` (i.e. ``"data"`` on a
-single pod) and the neuron axis over ``"model"``; the synapse matrix shards
-2-D ``P("model", None)`` on its presynaptic axis so each model shard owns
-the fan-out rows of its neurons. Each tick all-gathers the (tiny, u8)
-spike vector along "model" and computes a local (N x N/16) masked matmul --
-the TPU restatement of the paper's mux fabric (DESIGN.md §4).
+Distribution (implemented -- set ``EngineOptions.mesh``; DESIGN.md §15):
+the *postsynaptic* neuron axis shards over ``"model"``, so the synapse
+matrix shards ``P(None, "model")`` -- each shard owns the full fan-IN
+columns of its own neurons, plus their delay rings and LIF state. Each
+tick all-gathers the (tiny) spike vector along ``"model"`` and computes
+the complete local ``(N x N/D)`` masked matmul -- the TPU restatement of
+the paper's mux fabric, bit-exact with the single-device engine because
+every output column still reduces over its whole fan-in on one device
+(see :mod:`repro.parallel.snn_sharding`).
 """
 from __future__ import annotations
 

@@ -25,6 +25,10 @@ class SNNParams:
     Attributes:
       w: synaptic weights, shape ``(n, n)``; ``w[pre, post]``.
       c: connection list, shape ``(n, n)`` bool/0-1; ``c[pre, post]``.
+        ``None`` means the implicit all-to-all (every mux closed): the
+        effective matrix is ``w`` itself and no second ``(n, n)`` buffer
+        exists -- the 64k-fabric memory escape hatch (jnp/event backends
+        only; the Pallas kernels stream ``c`` explicitly).
       w_in: input weights, shape ``(n_in, n)`` mapping external channels
         onto neurons (identity for the paper's networks where inputs drive
         input-layer neurons directly).
@@ -32,7 +36,7 @@ class SNNParams:
     """
 
     w: jax.Array
-    c: jax.Array
+    c: Optional[jax.Array]
     w_in: jax.Array
     lif: LIFParams
 
@@ -66,9 +70,10 @@ def synaptic_input(
     """``sum_pre s[pre] * W[pre,post] * C[pre,post] (+ ext @ W_in)``.
 
     The masked matmul *is* the mux fabric: C routes a zero exactly where the
-    hardware's multiplexer would.
+    hardware's multiplexer would (``c=None``: every mux closed, ``wc = w``).
     """
-    wc = params.w * params.c.astype(params.w.dtype)
+    wc = (params.w if params.c is None
+          else params.w * params.c.astype(params.w.dtype))
     syn = spikes @ wc
     if ext is not None:
         syn = syn + ext @ params.w_in

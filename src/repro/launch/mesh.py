@@ -25,6 +25,30 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def make_snn_mesh(n_devices: int | None = None, axis: str = "model") -> jax.sharding.Mesh:
+    """1-D mesh the SNN fabric shards over (DESIGN.md §15).
+
+    ``n_devices=None`` takes every visible device.  On a plain CPU host,
+    call :func:`repro.util.env.ensure_host_device_count` BEFORE any jax
+    op to simulate a mesh (this is a function, not a module constant,
+    for exactly that reason -- importing this module must not initialize
+    the backend).
+    """
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    if n_devices < 1 or n_devices > len(jax.devices()):
+        raise ValueError(
+            f"n_devices={n_devices} out of range: {len(jax.devices())} "
+            "devices visible (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count before jax init, "
+            "e.g. via repro.util.env.ensure_host_device_count)")
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh((n_devices,), (axis,),
+                             axis_types=(axis_type.Auto,))
+    return jax.make_mesh((n_devices,), (axis,))
+
+
 def make_rules(
     mesh: jax.sharding.Mesh,
     cfg: ModelConfig,

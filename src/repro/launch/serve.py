@@ -1313,6 +1313,133 @@ def serve_snn_main(cfg, args) -> Dict:
     return stats
 
 
+def serve_sharded_main(cfg, args) -> Dict:
+    """Serve a mesh-sharded fabric: ONE tenant occupying every device.
+
+    The slotted :class:`SNNServer` time-shares one small fabric between
+    many tenants; this is the other end of the scale axis (DESIGN.md
+    §15): a single network too large for one device, its ``(n, n)``
+    weight matrix partitioned by destination columns over the
+    ``("model",)`` mesh from ``cfg.snn_mesh``.  The serving loop is the
+    continuous-admission chunk contract reused verbatim -- jitted
+    ``engine.chunk`` calls threading the (mesh-resident) carry, zero
+    recompiles after warmup -- just with D devices under each chunk.
+
+    At >=16384 neurons the topology is the implicit all-to-all
+    (``c=None``): ``W*C`` is ``W`` itself and the second 16 GiB buffer
+    never exists (the 64k memory escape hatch).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.core import connectivity
+    from repro.core.engine import TickCarry, TickEngine
+    from repro.core.lif import LIFParams
+    from repro.core.network_types import SNNParams, SNNState
+    from repro.launch.mesh import make_snn_mesh
+    from repro.parallel import snn_sharding
+    from repro.util.env import ensure_host_device_count
+
+    n, n_dev = cfg.n_neurons, cfg.snn_mesh
+    have = ensure_host_device_count(n_dev)
+    if have < n_dev:
+        raise SystemExit(
+            f"config {cfg.name!r} wants a {n_dev}-device mesh but jax sees "
+            f"{have} device(s) and its backend is already initialized; "
+            f"re-run with XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_dev} (or let repro.util.env.ensure_host_device_count run "
+            f"before anything touches jax)")
+    mesh = make_snn_mesh(n_dev)
+
+    backend = cfg.snn_backend
+    use_implicit = n > 4096          # c=None: no (n, n) mask at scale
+    if use_implicit and backend in ("pallas", "pallas_fused"):
+        print(f"backend {backend!r} needs an explicit c; the implicit "
+              f"all-to-all fabric at n={n} serves on 'jnp'")
+        backend = "jnp"
+    engine = TickEngine(EngineOptions(
+        mode=cfg.snn_mode, backend=backend, telemetry=True, mesh=mesh))
+
+    # -- build the fabric, shard-local where it is large ------------------
+    w = snn_sharding.make_sharded_dyadic_weights(n, mesh)
+    if use_implicit:
+        c = None
+    else:
+        c_np = connectivity.sparse_random(n, cfg.snn_density, seed=0)
+        sstats = connectivity.shard_stats(c_np, n_dev)
+        print(f"topology: density={cfg.snn_density}, edge imbalance "
+              f"across {n_dev} shards = "
+              f"{connectivity.shard_imbalance(sstats):.3f}")
+        c = jax.device_put(
+            jnp.asarray(c_np, jnp.float32),
+            NamedSharding(mesh, PartitionSpec(None, "model")))
+    n_in = min(n, 256)
+    rng = np.random.default_rng(7)
+    w_in = jnp.asarray(
+        rng.integers(0, 8, (n_in, n)).astype(np.float32) * 0.25)
+    params = SNNParams(w=w, c=c, w_in=w_in,
+                       lif=LIFParams.make(n, v_th=1.0, leak=0.25, r_ref=1))
+    rules = snn_sharding.snn_rules(mesh)
+    params = snn_sharding.place(
+        params, snn_sharding.params_specs(rules, params), mesh)
+    # Seed the telemetry slot up front: a carry whose pytree STRUCTURE
+    # changes between warmup and steady state would retrace once.
+    from repro.obs.telemetry import TickTelemetry
+
+    carry = TickCarry(state=SNNState.zeros((), n),
+                      telem=TickTelemetry.zeros(()))
+
+    chunk_ticks = max(1, cfg.snn_chunk_ticks)
+    n_chunks = max(2, args.requests)
+    traces = 0
+
+    @jax.jit
+    def chunk_fn(params, carry, ext):
+        nonlocal traces
+        traces += 1
+        return engine.chunk(params, carry, ext, chunk_ticks)
+
+    def _ext():
+        spikes = rng.random((chunk_ticks, n_in)) < cfg.snn_rate
+        return jnp.asarray(spikes, jnp.float32)
+
+    print(f"serving sharded SNN fabric n={n} on a {n_dev}-device mesh "
+          f"({backend} backend, {chunk_ticks}-tick chunks, "
+          f"{n_chunks} chunks)")
+    carry, raster = chunk_fn(params, carry, _ext())      # warmup / compile
+    jax.block_until_ready(raster)
+    warm_traces = traces
+    t0 = time.perf_counter()
+    for _ in range(n_chunks):
+        carry, raster = chunk_fn(params, carry, _ext())
+    jax.block_until_ready(raster)
+    dt = time.perf_counter() - t0
+
+    ticks = n_chunks * chunk_ticks
+    tel = carry.telem.summary(n)
+    stats = {
+        "mode": "sharded",
+        "n_neurons": n,
+        "n_devices": n_dev,
+        "ticks": ticks,
+        "ticks_per_s": ticks / dt,
+        "synops_per_s": ticks / dt * float(n) * float(n),
+        "recompiles_after_warmup": traces - warm_traces,
+    }
+    for k, v in stats.items():
+        print(f"{k}: {v}")
+    print("telemetry: " + ", ".join(f"{k}={v:.4g}" for k, v in tel.items()))
+    out = getattr(args, "metrics_out", None)
+    if out:
+        import json
+
+        with open(out, "w") as fh:
+            json.dump({**stats, "telemetry": tel}, fh, indent=1,
+                      sort_keys=True)
+        print(f"wrote metrics JSON to {out}")
+    assert stats["recompiles_after_warmup"] == 0, "chunk loop recompiled!"
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
@@ -1335,6 +1462,8 @@ def main(argv=None):
     bundle = get_bundle(args.arch)
     cfg = bundle.smoke if args.smoke else bundle.model
     if cfg.family == "snn":
+        if cfg.snn_mesh:
+            return serve_sharded_main(cfg, args)
         return serve_snn_main(cfg, args)
     print(f"serving {cfg.name}: {M.n_params(cfg):,} params, "
           f"{args.slots} slots, {args.requests} requests")

@@ -61,10 +61,15 @@ BASE_RULES: Dict[str, MeshAxes] = {
     # stacking
     "layers": None,
     "groups": None,
-    # snn
-    "neurons_pre": "model",
-    "neurons_post": None,
+    # snn -- destination (fan-in/column) sharding: postsynaptic columns
+    # shard, the presynaptic axis replicates, so every output column is
+    # reduced over its full fan-in on one device (bit-exact; see
+    # repro.parallel.snn_sharding and DESIGN.md §15).
+    "neurons_pre": None,
+    "neurons_post": "model",
     "inputs": None,
+    "time": None,
+    "delay": None,
 }
 
 

@@ -1,0 +1,1 @@
+"""Process-level utilities (environment setup before jax initializes)."""

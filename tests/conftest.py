@@ -1,0 +1,11 @@
+"""Tier-1 test environment: simulate an 8-device host mesh.
+
+Runs at collection time, before any test module imports jax, so the
+``--xla_force_host_platform_device_count`` flag lands before the backend
+initializes.  Multi-device tests (test_snn_sharding.py, the collective
+cost tests in test_hlo_cost.py) then run on any CPU box; a test that
+still needs to skip must name a real hardware requirement in its reason.
+"""
+from repro.util.env import ensure_host_device_count
+
+ensure_host_device_count(8)

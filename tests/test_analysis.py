@@ -322,6 +322,99 @@ class TestPallasTeeth:
 
 
 # ---------------------------------------------------------------------------
+# Rule class 6: sharding (no fabric-sized collective in the hot loop)
+# ---------------------------------------------------------------------------
+
+class TestShardingTeeth:
+    """The sharded engine's per-tick collective moves spikes ((B, n)); a
+    program that all-gathers the WEIGHT operand per tick must fire."""
+
+    N = 8
+
+    def _mesh(self):
+        from repro.launch.mesh import make_snn_mesh
+
+        return make_snn_mesh(1)
+
+    def test_w_gather_in_loop_fires(self):
+        from repro.analysis import sharding_rules
+        from repro.parallel.snn_sharding import shard_map_fn
+
+        n, mesh = self.N, self._mesh()
+        from jax.sharding import PartitionSpec as P
+
+        def body(w_local, s):
+            def tick(c, _):
+                # THE regression: replicate the whole weight matrix
+                # every iteration instead of exchanging spikes.
+                w_full = jax.lax.all_gather(
+                    w_local, "model", axis=1, tiled=True)
+                return c + s @ w_full, None
+            out, _ = jax.lax.scan(tick, jnp.zeros((n,), F32), None, length=3)
+            return out
+
+        fn = shard_map_fn(body, mesh, (P(None, "model"), P()), P())
+        cj = jaxpr_rules.closed_jaxpr_of(
+            fn, jnp.zeros((n, n), F32), jnp.zeros((n,), F32))
+        assert "sharding.w_gather_in_loop" in _rules(
+            sharding_rules.check_no_w_gather_in_loop(cj, "fixture", n=n))
+
+    def test_spike_gather_in_loop_passes(self):
+        from repro.analysis import sharding_rules
+        from repro.parallel.snn_sharding import shard_map_fn
+
+        n, mesh = self.N, self._mesh()
+        from jax.sharding import PartitionSpec as P
+
+        def body(w_local, s_local):
+            def tick(c, _):
+                # The sanctioned exchange: (n,) spikes, n-fold smaller.
+                s_full = jax.lax.all_gather(
+                    s_local, "model", axis=0, tiled=True)
+                return c + s_full @ w_local, None
+            out, _ = jax.lax.scan(
+                tick, jnp.zeros((w_local.shape[1],), F32), None, length=3)
+            return out
+
+        fn = shard_map_fn(body, mesh, (P(None, "model"), P("model")),
+                          P("model"))
+        cj = jaxpr_rules.closed_jaxpr_of(
+            fn, jnp.zeros((n, n), F32), jnp.zeros((n,), F32))
+        assert sharding_rules.check_no_w_gather_in_loop(
+            cj, "fixture", n=n) == []
+
+    def test_hoisted_w_gather_outside_loop_passes(self):
+        from repro.analysis import sharding_rules
+        from repro.parallel.snn_sharding import shard_map_fn
+
+        n, mesh = self.N, self._mesh()
+        from jax.sharding import PartitionSpec as P
+
+        def body(w_local, s):
+            # Once per rollout (e.g. a placement/premask step), not per
+            # tick: outside every loop body, so it passes.
+            w_full = jax.lax.all_gather(w_local, "model", axis=1, tiled=True)
+
+            def tick(c, _):
+                return c + s @ w_full, None
+            out, _ = jax.lax.scan(tick, jnp.zeros((n,), F32), None, length=3)
+            return out
+
+        fn = shard_map_fn(body, mesh, (P(None, "model"), P()), P())
+        cj = jaxpr_rules.closed_jaxpr_of(
+            fn, jnp.zeros((n, n), F32), jnp.zeros((n,), F32))
+        assert sharding_rules.check_no_w_gather_in_loop(
+            cj, "fixture", n=n) == []
+
+    def test_mesh_carrying_options_pass_static_rules(self):
+        from repro.core.engine import EngineOptions
+
+        make = lambda: EngineOptions(mesh=self._mesh())
+        assert static_rules.check_hashable_static(make(), "fixture") == []
+        assert static_rules.check_hash_stability(make, "fixture") == []
+
+
+# ---------------------------------------------------------------------------
 # False-positive resistance on the shipped registry + CLI plumbing
 # ---------------------------------------------------------------------------
 
@@ -340,6 +433,10 @@ class TestShippedPrograms:
 
     def test_learning_program_passes(self):
         self._check("tick/jnp/learning/notelem")
+
+    def test_sharded_programs_pass(self):
+        self._check("tick/sharded/frozen/notelem")
+        self._check("tick/sharded/learning/telem")
 
     def test_kernel_lints_pass(self):
         for reg, _ in programs.kernel_launches():

@@ -82,11 +82,48 @@ class TestKnownCounts:
 
 
 class TestCollectives:
-    def test_allreduce_bytes_counted_with_trips(self):
-        import os
-        # needs >1 device: use whatever this process has; skip if single
-        if len(jax.devices()) < 2:
-            pytest.skip("needs multi-device (run under dry-run env)")
+    def test_allgather_bytes_counted_with_trips(self):
+        """The sharded tick engine's one collective per tick, scanned:
+        the corrected parse must charge the gather once PER TRIP (raw
+        cost_analysis counts the while body once -- the same bug the
+        flops tests pin, on the bytes axis the roofline sums)."""
+        if len(jax.devices()) < 8:
+            pytest.skip("needs an 8-way mesh: 8 physical accelerators "
+                        "(CPU hosts get 8 simulated devices from "
+                        "tests/conftest.py)")
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import make_snn_mesh
+        from repro.parallel.snn_sharding import shard_map_fn
+
+        mesh = make_snn_mesh(8)
+        width, n_trips = 1024, 16
+        x = jax.ShapeDtypeStruct((width,), jnp.float32)
+
+        def once(v):
+            return v + jnp.sum(jax.lax.all_gather(v, "model", tiled=True))
+
+        def looped(v):
+            # The gather reads the CARRY, so it is loop-variant -- XLA
+            # cannot hoist it out of the while body the way the tick
+            # engine's hoisted W*C leaves the loop.
+            def body(c, _):
+                return c + jnp.sum(
+                    jax.lax.all_gather(c, "model", tiled=True)), None
+            return jax.lax.scan(body, v, None, length=n_trips)[0]
+
+        specs = ((P("model"),), P("model"))
+        s1 = hlo_cost.analyze(
+            _compile(shard_map_fn(once, mesh, *specs), x).as_text())
+        sn = hlo_cost.analyze(
+            _compile(shard_map_fn(looped, mesh, *specs), x).as_text())
+        per_gather = s1.collective_bytes.get("all-gather", 0.0)
+        # operand accounting: each gather reads one per-shard f32 slice
+        assert per_gather >= (width // 8) * 4
+        assert sn.collective_bytes.get("all-gather", 0.0) == pytest.approx(
+            n_trips * per_gather, rel=1e-6)
+        assert sn.total_collective_bytes == pytest.approx(
+            n_trips * s1.total_collective_bytes, rel=1e-6)
 
     def test_dot_bytes_positive(self):
         x = jax.ShapeDtypeStruct((D, D), jnp.float32)
